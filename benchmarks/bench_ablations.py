@@ -1,0 +1,88 @@
+"""Beyond-paper ablation study: which GCL-Sampler component earns its keep?
+
+Variants (on nw / lud / AlexNet, the three workloads exercising distinct
+failure modes of hand-crafted features):
+
+  full            the paper's configuration
+  no_training     untrained RGCN (random-init encoder; contrastive off)
+  no_vstats       dynamic-value summaries zeroed (structure-only graphs)
+  cf_only         control-flow edges only (no data-flow relations)
+  no_dataflow_val both ablations together (closest to a pure opcode-BBV)
+
+Paper's claim under test: structural AND semantic (dynamic-value) signals
+both contribute; hand-crafted-feature-like reductions reintroduce the
+merging failures of PKA/Sieve.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import metrics_for, save_results
+from repro.core.rgcn import RGCNConfig
+from repro.core.sampler import GCLSampler, GCLSamplerConfig
+from repro.core.train import GCLTrainConfig
+from repro.sim.simulate import sampling_error, speedup
+from repro.tracing.programs import get_program
+
+PROGRAMS = ("nw", "lud", "AlexNet")
+
+VARIANTS = {
+    "full": {},
+    "no_training": {"steps": 0},
+    "no_vstats": {"rgcn": {"use_vstats": False}},
+    "cf_only": {"rgcn": {"relations_used": (0,)}},
+    "no_dataflow_val": {"rgcn": {"use_vstats": False, "relations_used": (0,)}},
+}
+
+
+def _config(variant: dict, fast: bool) -> GCLSamplerConfig:
+    steps = variant.get("steps", 40 if fast else 120)
+    rc = RGCNConfig(**variant.get("rgcn", {}))
+    return GCLSamplerConfig(
+        cap_instr=64 if fast else 96, rgcn=rc,
+        train=GCLTrainConfig(steps=max(steps, 0), batch_size=8 if fast else 16),
+    )
+
+
+def run(programs=PROGRAMS, fast: bool = True, verbose: bool = True):
+    table = {}
+    for prog_name in programs:
+        prog = get_program(prog_name)
+        ms = metrics_for(prog_name, "P1")
+        table[prog_name] = {}
+        for vname, variant in VARIANTS.items():
+            t0 = time.time()
+            cfg = _config(variant, fast)
+            sampler = GCLSampler(cfg)
+            graphs = sampler.build_graphs(prog)
+            if cfg.train.steps > 0:
+                sampler.train(graphs)
+            else:  # untrained encoder: random init
+                import jax
+
+                from repro.core.rgcn import init_rgcn
+
+                sampler.params = init_rgcn(jax.random.PRNGKey(0), cfg.rgcn)
+            emb = sampler.embed(graphs)
+            seqs = np.array([k.seq for k in prog.kernels])
+            plan = sampler.cluster(emb, seqs)
+            table[prog_name][vname] = {
+                "k": plan.num_clusters,
+                "error_pct": sampling_error(plan, ms),
+                "speedup": speedup(plan, ms),
+            }
+            if verbose:
+                r = table[prog_name][vname]
+                print(f"[ablate] {prog_name:8s} {vname:16s} K={r['k']:3d} "
+                      f"err={r['error_pct']:6.2f}% su={r['speedup']:.1f}x "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+    save_results("ablations", table)
+    return table
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,57 @@
+"""Paper Fig. 4 + Fig. 5 + headline: sampling error and speedup of
+GCL-Sampler vs PKA / Sieve / STEM+ROOT across all 11 workloads on P1."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import evaluate, plans_for, save_results
+from repro.tracing.programs import PAPER_PROGRAMS
+
+METHODS = ("GCL-Sampler", "PKA", "Sieve", "STEM+ROOT")
+
+
+def run(programs=None, fast: bool = False, verbose: bool = True):
+    programs = programs or PAPER_PROGRAMS
+    table = {}
+    for prog in programs:
+        t0 = time.time()
+        plans = plans_for(prog, fast=fast, verbose=verbose)
+        table[prog] = {m: evaluate(plans[m], prog, "P1") for m in METHODS}
+        if verbose:
+            row = " | ".join(
+                f"{m}: {table[prog][m]['error_pct']:.2f}% "
+                f"{table[prog][m]['speedup']:.1f}x"
+                for m in METHODS
+            )
+            print(f"[fig4/5] {prog:10s} {row} ({time.time() - t0:.0f}s)",
+                  flush=True)
+    summary = {}
+    for m in METHODS:
+        errs = [table[p][m]["error_pct"] for p in programs]
+        sus = [table[p][m]["speedup"] for p in programs]
+        summary[m] = {
+            "avg_error_pct": float(np.mean(errs)),
+            "avg_speedup": float(np.mean(sus)),
+        }
+    payload = {"per_program": table, "summary": summary,
+               "paper_reference": {
+                   "GCL-Sampler": {"avg_error_pct": 0.37, "avg_speedup": 258.94},
+                   "PKA": {"avg_error_pct": 20.90, "avg_speedup": 129.23},
+                   "Sieve": {"avg_error_pct": 4.10, "avg_speedup": 94.90},
+                   "STEM+ROOT": {"avg_error_pct": 0.38, "avg_speedup": 56.57},
+               }}
+    save_results("fig4_5_accuracy_speedup", payload)
+    if verbose:
+        print("[fig4/5] averages:")
+        for m in METHODS:
+            s = summary[m]
+            print(f"  {m:12s} err {s['avg_error_pct']:6.2f}%  "
+                  f"speedup {s['avg_speedup']:8.2f}x", flush=True)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Table 3: cross-architecture robustness — clustering decisions made
+on P1 (Turing) applied to ground truth on P2 (Ampere) and P3 (Ada)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import evaluate, plans_for, save_results
+from repro.tracing.programs import PAPER_PROGRAMS
+
+
+def run(programs=None, fast: bool = False, verbose: bool = True):
+    programs = programs or PAPER_PROGRAMS
+    table = {}
+    for prog in programs:
+        plan = plans_for(prog, fast=fast, verbose=verbose)["GCL-Sampler"]
+        table[prog] = {
+            plat: evaluate(plan, prog, plat) for plat in ("P1", "P2", "P3")
+        }
+        if verbose:
+            row = " | ".join(
+                f"{plat}: {table[prog][plat]['error_pct']:.2f}% "
+                f"{table[prog][plat]['speedup']:.1f}x"
+                for plat in ("P1", "P2", "P3")
+            )
+            print(f"[table3] {prog:10s} {row}", flush=True)
+    summary = {
+        plat: {
+            "avg_error_pct": float(np.mean(
+                [table[p][plat]["error_pct"] for p in programs])),
+            "avg_speedup": float(np.mean(
+                [table[p][plat]["speedup"] for p in programs])),
+        }
+        for plat in ("P1", "P2", "P3")
+    }
+    payload = {"per_program": table, "summary": summary,
+               "paper_reference": {
+                   "P1": {"avg_error_pct": 0.37, "avg_speedup": 258.94},
+                   "P2": {"avg_error_pct": 1.50, "avg_speedup": 203.97},
+                   "P3": {"avg_error_pct": 1.22, "avg_speedup": 203.64},
+               }}
+    save_results("table3_crossarch", payload)
+    if verbose:
+        for plat, s in summary.items():
+            print(f"[table3] {plat}: avg err {s['avg_error_pct']:.2f}% "
+                  f"avg speedup {s['avg_speedup']:.1f}x", flush=True)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper §5.4: end-to-end simulator integration — wall-time of simulating
+the full workload vs only the representative kernels (+ reconstruction),
+with the resulting cycle error.  Mirrors the HyFiSS integration: the sampled
+run feeds the simulator a script of representative kernels and scales by
+cluster weights."""
+
+from __future__ import annotations
+
+from benchmarks.common import metrics_for, plans_for, save_results
+from repro.sim.simulate import (
+    full_metrics, reconstruct, sampling_error, sim_wall_time,
+)
+
+PROGRAMS = ("nw", "lu", "cfd", "phi-2", "pythia")
+
+
+def run(programs=PROGRAMS, fast: bool = False, verbose: bool = True):
+    table = {}
+    for prog in programs:
+        plan = plans_for(prog, fast=fast, verbose=verbose)["GCL-Sampler"]
+        ms = metrics_for(prog, "P1")
+        t_full = sim_wall_time(ms)
+        t_sampled = sim_wall_time(ms, plan.rep_indices())
+        table[prog] = {
+            "sim_time_full_s": t_full,
+            "sim_time_sampled_s": t_sampled,
+            "sim_speedup": t_full / max(t_sampled, 1e-12),
+            "cycle_error_pct": sampling_error(plan, ms),
+            "reps": len(plan.rep_indices()),
+            "kernels": len(ms),
+        }
+        if verbose:
+            r = table[prog]
+            print(f"[e2e] {prog:8s} full {r['sim_time_full_s']:8.1f}s -> "
+                  f"sampled {r['sim_time_sampled_s']:6.1f}s "
+                  f"({r['sim_speedup']:.1f}x, err {r['cycle_error_pct']:.2f}%)",
+                  flush=True)
+    save_results("e2e_simulation", table)
+    return table
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Paper Fig. 6: microarchitectural-metric fidelity — achieved occupancy,
+IPC, L1/L2 hit rates, full vs sampled, for cfd (Rodinia) and pythia (LLM)."""
+
+from __future__ import annotations
+
+from benchmarks.common import metrics_for, plans_for, save_results
+from repro.sim.simulate import full_metrics, reconstruct
+
+PROGRAMS = ("cfd", "pythia")
+METRICS = ("cycles", "ipc", "l1_hit", "l2_hit", "occupancy")
+
+
+def run(fast: bool = False, verbose: bool = True):
+    table = {}
+    for prog in PROGRAMS:
+        plan = plans_for(prog, fast=fast, verbose=verbose)["GCL-Sampler"]
+        ms = metrics_for(prog, "P1")
+        full = full_metrics(ms)
+        est = reconstruct(plan, ms)
+        table[prog] = {
+            m: {
+                "full": full[m],
+                "sampled": est[m],
+                "error_pct": abs(full[m] - est[m]) / max(abs(full[m]), 1e-12) * 100,
+            }
+            for m in METRICS
+        }
+        if verbose:
+            for m in METRICS:
+                r = table[prog][m]
+                print(f"[fig6] {prog:8s} {m:10s} full={r['full']:.4g} "
+                      f"sampled={r['sampled']:.4g} err={r['error_pct']:.2f}%",
+                      flush=True)
+    save_results("fig6_microarch", table)
+    return table
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Deliverable (g): per-(arch x shape) roofline table from the dry-run
+artifact (single-pod mesh), markdown-rendered for EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import save_results
+
+DRYRUN = os.environ.get("DRYRUN_RESULTS", "dryrun_results.json")
+
+
+def run(verbose: bool = True):
+    if not os.path.exists(DRYRUN):
+        print(f"[roofline] {DRYRUN} missing — run "
+              f"`python -m repro.launch.dryrun --all --both-meshes` first")
+        return {}
+    with open(DRYRUN) as f:
+        results = json.load(f)
+    rows = []
+    for r in results:
+        if r.get("multi_pod") or r.get("status") != "ok":
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+            "model_flops": rl["model_flops"],
+            "hlo_flops": rl["hlo_flops_total"],
+            "useful_flop_ratio": rl["useful_flop_ratio"],
+            "roofline_fraction": rl["roofline_fraction"],
+            "hbm_args_gb": (r["memory"]["argument_bytes_per_device"] or 0) / 1e9,
+            "hbm_temp_gb": (r["memory"]["temp_bytes_per_device"] or 0) / 1e9,
+        })
+    if verbose:
+        hdr = (f"{'arch':18s}{'shape':13s}{'comp_s':>11s}{'mem_s':>11s}"
+               f"{'coll_s':>11s} {'dominant':10s}{'useful':>7s}{'roofl':>7s}")
+        print(hdr)
+        for row in rows:
+            print(f"{row['arch']:18s}{row['shape']:13s}"
+                  f"{row['compute_s']:11.3e}{row['memory_s']:11.3e}"
+                  f"{row['collective_s']:11.3e} {row['dominant']:10s}"
+                  f"{100 * (row['useful_flop_ratio'] or 0):6.0f}%"
+                  f"{100 * (row['roofline_fraction'] or 0):6.1f}%")
+    save_results("roofline_table", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

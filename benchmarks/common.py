@@ -1,0 +1,88 @@
+"""Shared benchmark plumbing: fit all four methods on a program, evaluate
+error/speedup on a platform, cache GCL plans across benchmarks (training is
+the expensive step and Table 3 reuses Fig 4/5's clustering)."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.baselines import pka_plan, sieve_plan, stem_root_plan
+from repro.core.sampler import GCLSampler, GCLSamplerConfig
+from repro.core.train import GCLTrainConfig
+from repro.sim.simulate import (
+    full_metrics, reconstruct, sampling_error, sim_wall_time,
+    simulate_program, speedup,
+)
+from repro.tracing.programs import PAPER_PROGRAMS, get_program
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+os.makedirs(RESULTS_DIR, exist_ok=True)
+
+_plan_cache: dict = {}
+_metrics_cache: dict = {}
+
+
+def sampler_config(fast: bool = False) -> GCLSamplerConfig:
+    if fast:
+        return GCLSamplerConfig(
+            cap_instr=64, train=GCLTrainConfig(steps=40, batch_size=8))
+    return GCLSamplerConfig(
+        cap_instr=96, train=GCLTrainConfig(steps=120, batch_size=16))
+
+
+def metrics_for(program_name: str, platform: str):
+    key = (program_name, platform)
+    if key not in _metrics_cache:
+        _metrics_cache[key] = simulate_program(get_program(program_name), platform)
+    return _metrics_cache[key]
+
+
+def plans_for(program_name: str, fast: bool = False, verbose: bool = True):
+    """All four methods' plans (clustering decisions made on P1, as in the
+    paper's cross-architecture protocol)."""
+    key = (program_name, fast)
+    if key in _plan_cache:
+        return _plan_cache[key]
+    prog = get_program(program_name)
+    t0 = time.time()
+    gcl = GCLSampler(sampler_config(fast)).fit(prog)
+    if verbose:
+        print(f"  [gcl] {program_name}: K={gcl.num_clusters} "
+              f"({time.time() - t0:.0f}s)", flush=True)
+    plans = {
+        "GCL-Sampler": gcl,
+        "PKA": pka_plan(prog),
+        "Sieve": sieve_plan(prog),
+        "STEM+ROOT": stem_root_plan(prog),
+    }
+    _plan_cache[key] = plans
+    return plans
+
+
+def evaluate(plan, program_name: str, platform: str = "P1"):
+    ms = metrics_for(program_name, platform)
+    return {
+        "error_pct": sampling_error(plan, ms),
+        "speedup": speedup(plan, ms),
+        "clusters": plan.num_clusters,
+        "reps": len(plan.rep_indices()),
+    }
+
+
+def save_results(name: str, payload):
+    # fast/CI runs write *_fast.json so they never clobber the paper-sized
+    # artifacts that render_experiments.py reads (set by benchmarks.run).
+    name += os.environ.get("REPRO_RESULTS_SUFFIX", "")
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def geomean(xs):
+    xs = [max(x, 1e-12) for x in xs]
+    return float(np.exp(np.mean(np.log(xs))))

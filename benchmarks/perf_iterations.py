@@ -1,0 +1,301 @@
+"""§Perf hillclimbing harness (deliverable g): hypothesis -> change ->
+re-lower -> re-analyse cycles on the three chosen (arch x shape) pairs.
+
+Chosen pairs (from the baseline roofline table):
+  1. qwen2-72b x train_4k      — largest memory-dominated train cell
+  2. grok-1-314b x decode_32k  — most collective-bound cell
+  3. rgcn x contrastive_train  — the paper's own technique (RGCN InfoNCE
+                                 step on the production mesh)
+
+Each experiment is a (name, hypothesis, overrides) triple; the harness
+lowers the cell with the overrides applied, extracts the three roofline
+terms, and records confirmed/refuted vs the stated hypothesis in
+benchmarks/results/perf_iterations.json (narrated in EXPERIMENTS.md §Perf).
+
+Run one pair:  PYTHONPATH=src python -m benchmarks.perf_iterations --pair qwen_train
+NOTE: must run in a fresh process (forces 512 host devices via dryrun import).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.launch import dryrun as dr  # sets XLA_FLAGS before jax init
+
+import jax
+import jax.numpy as jnp
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results",
+                       "perf_iterations.json")
+
+
+# ---------------------------------------------------------------------------
+# LM cells via the dryrun driver
+# ---------------------------------------------------------------------------
+
+QWEN_TRAIN = [
+    ("baseline", "paper-faithful baseline (full remat, no SP)", {}),
+    ("sp",
+     "hypothesis: norms/residual/rope run replicated over the 16-way model "
+     "axis; sequence-sharding activations (Megatron-SP) removes the "
+     "redundancy -> memory term down 10-25%",
+     {"rules_kw": {"seq_shard": True}}),
+    ("sp+dots_remat",
+     "hypothesis: full remat recomputes every matmul in bwd; saving matmul "
+     "outputs (dots policy) cuts recompute -> compute term down ~20%, "
+     "memory term down ~10%, at higher resident temp",
+     {"rules_kw": {"seq_shard": True}, "cfg_kw": {"remat_policy": "dots"}}),
+    ("sp+dots+microbatch8",
+     "hypothesis: 8-way gradient accumulation shrinks per-microbatch "
+     "activations 8x -> temp memory down toward HBM fit; terms ~unchanged "
+     "(same total work)",
+     {"rules_kw": {"seq_shard": True},
+      "cfg_kw": {"remat_policy": "dots"}, "microbatch": 8}),
+]
+
+GROK_DECODE = [
+    ("baseline", "paper-faithful baseline (fp32 master params, FSDP, dense "
+     "softmax over the seq-sharded KV cache)", {}),
+    ("split_softmax16",
+     "hypothesis: the 79GB/step collective is GSPMD all-gathering the "
+     "seq-sharded KV cache for softmax (dtype-insensitivity of the baseline "
+     "proved it isn't weights); flash-decoding split softmax keeps partials "
+     "shard-local and merges (B,K,G,16[,hd]) LSE stats -> collective term "
+     "down >10x",
+     {"cfg_kw": {"decode_split": 16}}),
+    ("split16+bf16_params",
+     "hypothesis: with the KV gather gone, remaining bytes are weight reads "
+     "+ FSDP weight gathers; bf16 serving weights halve them -> memory term "
+     "down ~1.5-2x",
+     {"cfg_kw": {"decode_split": 16, "param_dtype": "bfloat16"}}),
+    ("split16+bf16+no_fsdp",
+     "hypothesis: dropping FSDP keeps weights resident (pure 16-way TP): "
+     "weight all-gathers disappear -> collective floor; per-device weight "
+     "bytes grow 16x (39GB bf16 — needs int8 or a wider model axis to fit "
+     "16GB HBM; recorded as the trade-off)",
+     {"cfg_kw": {"decode_split": 16, "param_dtype": "bfloat16"},
+      "rules_kw": {"fsdp": False}}),
+]
+
+
+EP_PARAM_PREF = ("experts", "vocab", "ffn", "heads", "d_inner", "ssm_heads",
+                 "attn_hidden", "embed")
+EP_ACT_PREF = ("experts", "vocab", "ffn", "heads", "d_inner", "ssm_heads",
+               "cache_seq")
+
+DBRX_TRAIN = [
+    ("baseline_tp_moe",
+     "TP-MoE baseline: expert d_ff sharded over 'model' (Megatron-style, one "
+     "all-reduce after w2); dispatch buffers replicated over model", {}),
+    ("expert_parallel",
+     "hypothesis: sharding EXPERTS over 'model' (EP) keeps each expert's "
+     "FFN fully local (no partial-sum all-reduces) at the cost of "
+     "resharding the dispatch buffers across experts (all-to-all-like "
+     "gathers) -> collective mix shifts; net direction depends on "
+     "capacity*d_model vs d_ff traffic",
+     {"rules_kw": {"param_model_pref": EP_PARAM_PREF,
+                   "act_model_pref": EP_ACT_PREF}}),
+]
+
+
+def run_lm_pair(arch, shape, experiments, out):
+    import time
+    rows = []
+    for name, hypothesis, ov in experiments:
+        t0 = time.time()
+        tcfg_kw = {}
+        cfg_kw = dict(ov.get("cfg_kw", {}))
+        if "microbatch" in ov:
+            # plumb microbatch through the train config used by dryrun
+            dr.TrainConfigPatch = ov["microbatch"]
+            orig = dr._train_config
+
+            def patched(cfg, _orig=orig, mb=ov["microbatch"]):
+                t = _orig(cfg)
+                from dataclasses import replace
+                return replace(t, microbatch=mb)
+
+            dr._train_config = patched
+        try:
+            rec = dr.lower_cell(arch, shape, multi_pod=False,
+                                rules_kw=ov.get("rules_kw"),
+                                cfg_kw=cfg_kw or None)
+        finally:
+            if "microbatch" in ov:
+                dr._train_config = orig
+        rl = rec["roofline"]
+        # gradient accumulation wraps the step in a lax.scan over
+        # microbatches, which cost_analysis counts ONCE — scale the per-step
+        # terms back up (memory_analysis is unaffected: it reports the real
+        # peak, which is exactly what microbatching shrinks).
+        scale = ov.get("microbatch", 1)
+        terms = {k: rl[k] * scale
+                 for k in ("compute_s", "memory_s", "collective_s")}
+        row = {
+            "experiment": name, "hypothesis": hypothesis,
+            **terms,
+            "dominant": max(terms, key=terms.get).replace("_s", ""),
+            "bound_s": max(terms.values()),
+            "temp_gb": (rec["memory"]["temp_bytes_per_device"] or 0) / 1e9,
+            "args_gb": (rec["memory"]["argument_bytes_per_device"] or 0) / 1e9,
+            "wall_s": round(time.time() - t0, 1),
+        }
+        rows.append(row)
+        print(f"[{arch} x {shape}] {name}: comp {row['compute_s']:.3e} "
+              f"mem {row['memory_s']:.3e} coll {row['collective_s']:.3e} "
+              f"({row['dominant']}) temp {row['temp_gb']:.1f}GB", flush=True)
+    _save(out, {"pair": f"{arch} x {shape}", "iterations": rows})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# RGCN contrastive-training cell (the paper's technique itself)
+# ---------------------------------------------------------------------------
+
+
+def lower_rgcn(batch_global=1024, n_nodes=768, n_edges=1536, warps=2,
+               *, batch_axes=("data",), message_dtype="float32"):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.rgcn import RGCNConfig, init_rgcn
+    from repro.core.train import ContrastiveTrainer, GCLTrainConfig
+    from repro.launch.mesh import make_production_mesh
+    from repro.optim import adamw_init
+
+    mesh = make_production_mesh()
+    rc = RGCNConfig(message_dtype=message_dtype)
+    tc = GCLTrainConfig()
+    trainer = ContrastiveTrainer(rc, tc)
+
+    B, N, E = batch_global, n_nodes, n_edges
+    bspecs = {
+        "node_type": jax.ShapeDtypeStruct((B, N), jnp.int32),
+        "token": jax.ShapeDtypeStruct((B, N), jnp.int32),
+        "pc_norm": jax.ShapeDtypeStruct((B, N), jnp.float32),
+        "vstats": jax.ShapeDtypeStruct((B, N, 8), jnp.float32),
+        "warp_id": jax.ShapeDtypeStruct((B, N), jnp.int32),
+        "node_mask": jax.ShapeDtypeStruct((B, N), jnp.float32),
+        "edge_src": jax.ShapeDtypeStruct((B, E), jnp.int32),
+        "edge_dst": jax.ShapeDtypeStruct((B, E), jnp.int32),
+        "edge_type": jax.ShapeDtypeStruct((B, E), jnp.int32),
+        "edge_mask": jax.ShapeDtypeStruct((B, E), jnp.float32),
+        "n_warps": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+    astate = jax.eval_shape(
+        lambda k: adamw_init(init_rgcn(k, rc), tc.opt), jax.random.PRNGKey(0)
+    )
+    akey = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+
+    rep = NamedSharding(mesh, P())
+    st_sh = jax.tree_util.tree_map(lambda _: rep, astate)
+    ax = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    b_sh = {
+        k: NamedSharding(mesh, P(ax, *([None] * (len(v.shape) - 1))))
+        for k, v in bspecs.items()
+    }
+
+    step = trainer._make_step(warps)._fun if hasattr(
+        trainer._make_step(warps), "_fun") else None
+    # build an unjitted step (the trainer's is already jit'd; re-wrap with
+    # explicit shardings for the production mesh)
+    from repro.optim import apply_gradients
+
+    def raw_step(state, batch, rng):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: trainer._loss(p, batch, warps, rng), has_aux=True
+        )(state.params)
+        state, om = apply_gradients(state, grads, tc.opt)
+        return state, dict(metrics, loss=loss, **om)
+
+    with mesh:
+        lowered = jax.jit(
+            raw_step, in_shardings=(st_sh, b_sh, rep),
+            out_shardings=(st_sh, None), donate_argnums=(0,),
+        ).lower(astate, bspecs, akey)
+        compiled = lowered.compile()
+    return compiled, mesh
+
+
+RGCN_EXPERIMENTS = [
+    ("baseline_dp",
+     "paper-faithful: data-parallel only (batch over 'data'); the 16-way "
+     "model axis is idle for this small model — expected low utilization",
+     {"batch_axes": ("data",)}),
+    ("2d_batch",
+     "hypothesis: sharding the graph batch over BOTH mesh axes (256-way DP) "
+     "uses the idle axis -> per-device compute/memory terms down ~16x; "
+     "InfoNCE all-gather of projections grows (global negatives over 256 "
+     "shards) but stays tiny (B x 64 floats)",
+     {"batch_axes": ("data", "model")}),
+    ("2d_batch+bf16_messages",
+     "hypothesis: message-passing traffic (gather + segment-sum payloads) "
+     "dominates per-device bytes; bf16 messages halve it -> memory term "
+     "down ~1.5-2x, fp32 accumulation keeps LayerNorm numerics",
+     {"batch_axes": ("data", "model"), "message_dtype": "bfloat16"}),
+]
+
+
+def run_rgcn_pair(out):
+    from repro.launch.roofline import roofline_terms
+
+    rows = []
+    for name, hypothesis, kw in RGCN_EXPERIMENTS:
+        compiled, mesh = lower_rgcn(**kw)
+        costs = dr._costs(compiled)
+        mem = compiled.memory_analysis()
+        rec = {
+            "num_devices": int(mesh.devices.size),
+            "cost": {"flops_per_device": costs["flops"],
+                     "bytes_per_device": costs["bytes"]},
+            "collectives": {"per_device_bytes": costs["coll"]},
+            "model_flops": 0.0,
+        }
+        rl = roofline_terms(rec)
+        row = {
+            "experiment": name, "hypothesis": hypothesis,
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+            "bound_s": rl["step_time_bound_s"],
+            "temp_gb": (getattr(mem, "temp_size_in_bytes", 0) or 0) / 1e9,
+        }
+        rows.append(row)
+        print(f"[rgcn x contrastive_train] {name}: comp {row['compute_s']:.3e} "
+              f"mem {row['memory_s']:.3e} coll {row['collective_s']:.3e} "
+              f"({row['dominant']})", flush=True)
+    _save(out, {"pair": "rgcn x contrastive_train", "iterations": rows})
+    return rows
+
+
+def _save(out, payload):
+    data = []
+    if os.path.exists(out):
+        with open(out) as f:
+            data = json.load(f)
+    data = [d for d in data if d.get("pair") != payload["pair"]]
+    data.append(payload)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(data, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=["qwen_train", "grok_decode", "rgcn",
+                                       "dbrx_moe"],
+                    required=True)
+    ap.add_argument("--out", default=RESULTS)
+    args = ap.parse_args()
+    if args.pair == "qwen_train":
+        run_lm_pair("qwen2-72b", "train_4k", QWEN_TRAIN, args.out)
+    elif args.pair == "grok_decode":
+        run_lm_pair("grok-1-314b", "decode_32k", GROK_DECODE, args.out)
+    elif args.pair == "dbrx_moe":
+        run_lm_pair("dbrx-132b", "train_4k", DBRX_TRAIN, args.out)
+    else:
+        run_rgcn_pair(args.out)
+
+
+if __name__ == "__main__":
+    main()

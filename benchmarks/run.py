@@ -1,0 +1,109 @@
+"""Benchmark runner — one entry per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``            fast mode (CI-sized)
+``PYTHONPATH=src python -m benchmarks.run --full``     paper-sized runs
+
+Prints ``name,us_per_call,derived`` CSV rows summarizing each benchmark,
+and writes detailed JSON under benchmarks/results/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-sized runs (all 11 programs, long training)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig45,table3,fig6,e2e,traincost,roofline")
+    args = ap.parse_args()
+    fast = not args.full
+    only = set(args.only.split(",")) if args.only else None
+    if fast:  # keep the paper-sized artifacts (EXPERIMENTS.md inputs) intact
+        import os
+
+        os.environ.setdefault("REPRO_RESULTS_SUFFIX", "_fast")
+
+    # fast mode trims the program list to keep CPU runtime sane; --full runs
+    # the paper's 11-program suite.
+    programs = (
+        ["nw", "backprop", "3mm", "bfs", "lud", "AlexNet"] if fast else None
+    )
+
+    rows = []
+
+    def bench(name, fn, **kw):
+        if only and name not in only:
+            return
+        t0 = time.time()
+        out = fn(**kw)
+        dt = time.time() - t0
+        derived = _derive(name, out)
+        rows.append((name, f"{dt * 1e6:.0f}", derived))
+        print(f"[run] {name} done in {dt:.0f}s -> {derived}", flush=True)
+
+    from benchmarks import (
+        bench_ablations, bench_accuracy_speedup, bench_crossarch,
+        bench_e2e_sim, bench_microarch, bench_roofline,
+        bench_train_throughput,
+    )
+
+    bench("fig45", bench_accuracy_speedup.run, programs=programs, fast=fast)
+    bench("table3", bench_crossarch.run, programs=programs, fast=fast)
+    bench("fig6", bench_microarch.run, fast=fast)
+    bench("e2e", bench_e2e_sim.run,
+          programs=("nw", "lud") if fast else bench_e2e_sim.PROGRAMS,
+          fast=fast)
+    bench("traincost", bench_train_throughput.run, fast=fast)
+    if args.full or (only and "ablations" in only):
+        bench("ablations", bench_ablations.run, fast=True)
+    bench("roofline", bench_roofline.run)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+
+
+def _derive(name, out) -> str:
+    try:
+        if name == "fig45":
+            s = out["summary"]["GCL-Sampler"]
+            return (f"gcl_err={s['avg_error_pct']:.2f}%"
+                    f";gcl_speedup={s['avg_speedup']:.1f}x")
+        if name == "table3":
+            return ";".join(
+                f"{p}_err={out['summary'][p]['avg_error_pct']:.2f}%"
+                for p in ("P1", "P2", "P3")
+            )
+        if name == "fig6":
+            errs = [v["error_pct"] for prog in out.values() for v in prog.values()]
+            return f"max_metric_err={max(errs):.2f}%"
+        if name == "e2e":
+            sus = [v["sim_speedup"] for v in out.values()]
+            return f"max_sim_speedup={max(sus):.1f}x"
+        if name == "traincost":
+            rates = [v["s_per_100_kernels"] for v in out.values()]
+            return f"s_per_100_kernels={max(rates):.1f}"
+        if name == "ablations":
+            worst = max(
+                r["error_pct"] for prog in out.values() for r in prog.values()
+            )
+            full_err = max(r["full"]["error_pct"] for r in out.values())
+            return f"full_err={full_err:.2f}%;worst_ablation_err={worst:.2f}%"
+        if name == "roofline":
+            n = len(out)
+            dom = {}
+            for r in out:
+                dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+            return f"cells={n};" + ";".join(f"{k}={v}" for k, v in sorted(dom.items()))
+    except Exception as e:  # pragma: no cover
+        return f"derive_error={e!r}"
+    return ""
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""LM pretraining driver on the assigned-architecture zoo (substrate e2e
+example): trains a reduced config of any ``--arch`` on the deterministic
+synthetic stream with checkpointing + watchdog, via the production launcher.
+
+    PYTHONPATH=src python examples/lm_pretrain.py --arch llama3.2-3b \\
+        --steps 300 --batch 8 --seq-len 256
+
+(The loss drops markedly within a few hundred steps on the Markov stream;
+~10-50M-param smoke configs train at a few steps/s on CPU.)
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_lm_pretrain")
+    args = ap.parse_args()
+    return train_main([
+        "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps),
+        "--batch", str(args.batch),
+        "--seq-len", str(args.seq_len),
+        "--lr", "1e-3",
+        "--checkpoint-dir", args.checkpoint_dir,
+        "--checkpoint-every", "100",
+        "--resume", "auto",
+        "--log-every", "20",
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,54 @@
+"""Quickstart: the whole GCL-Sampler pipeline on one workload in ~2 minutes.
+
+    PYTHONPATH=src python examples/quickstart.py [--program nw]
+
+Stages (paper Fig. 2): trace -> HRG -> RGCN contrastive training ->
+embeddings -> K-Means -> representative selection -> sampled simulation,
+with error/speedup against full simulation and the three baselines.
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.baselines import pka_plan, sieve_plan, stem_root_plan
+from repro.core.sampler import GCLSampler, GCLSamplerConfig
+from repro.core.train import GCLTrainConfig
+from repro.sim.simulate import sampling_error, simulate_program, speedup
+from repro.tracing.programs import PAPER_PROGRAMS, get_program
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--program", default="nw", choices=PAPER_PROGRAMS)
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    prog = get_program(args.program)
+    print(f"== {args.program}: {len(prog)} kernel invocations ==")
+
+    t0 = time.time()
+    sampler = GCLSampler(GCLSamplerConfig(
+        cap_instr=64,
+        train=GCLTrainConfig(steps=args.steps, batch_size=8),
+    ))
+    plan = sampler.fit(prog, verbose=True)
+    print(f"GCL-Sampler: K={plan.num_clusters} clusters, "
+          f"{len(plan.rep_indices())} representative(s) "
+          f"({time.time() - t0:.0f}s)")
+
+    metrics = simulate_program(prog, "P1")
+    rows = [("GCL-Sampler", plan)]
+    rows += [("PKA", pka_plan(prog)), ("Sieve", sieve_plan(prog)),
+             ("STEM+ROOT", stem_root_plan(prog))]
+    print(f"\n{'method':14s}{'clusters':>9s}{'reps':>6s}"
+          f"{'error %':>9s}{'speedup':>9s}")
+    for name, p in rows:
+        print(f"{name:14s}{p.num_clusters:9d}{len(p.rep_indices()):6d}"
+              f"{sampling_error(p, metrics):9.2f}"
+              f"{speedup(p, metrics):8.1f}x")
+
+
+if __name__ == "__main__":
+    main()

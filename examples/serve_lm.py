@@ -1,0 +1,29 @@
+"""Batched serving example over the assigned-architecture zoo: prefill +
+KV/SSM-cache decode with continuous batches of synthetic requests.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m
+"""
+
+import argparse
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-780m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+    return serve_main([
+        "--arch", args.arch, "--smoke",
+        "--batch", str(args.batch),
+        "--prompt-len", "48",
+        "--tokens", str(args.tokens),
+        "--requests", "2",
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

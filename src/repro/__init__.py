@@ -1,0 +1,17 @@
+"""repro: GCL-Sampler — sampled GPU simulation via graph contrastive learning.
+
+A production-grade JAX framework reproducing and extending
+"GCL-Sampler: Discovering Kernel Similarity for Sampled GPU Simulation via
+Graph Contrastive Learning" (CS.PF 2026).
+
+Layers (bottom-up):
+  tracing      SASS-like workload/trace substrate (the simulation *subject*)
+  sim          stall-aware cycle-approximate GPU timing model (ground truth)
+  core         the paper's contribution: HRG + RGCN contrastive sampler
+  models       assigned LM architecture zoo (GQA / MoE / SSM / hybrid)
+  kernels      Pallas TPU kernels for compute hot-spots
+  distributed  sharding rules, collectives, fault tolerance
+  launch       mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,20 @@
+"""llama3.2-3b [dense] — small llama3-family GQA transformer.
+
+[hf:meta-llama/Llama-3.2-1B; unverified].  28L, d_model=3072, 24 heads
+(GQA kv=8), d_ff=8192, vocab=128256, rope_theta=500k, tied embeddings.
+"""
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama3.2-3b",
+    family="dense",
+    num_layers=28,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+)

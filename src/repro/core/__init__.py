@@ -1,0 +1,14 @@
+"""The paper's primary contribution: GCL-Sampler.
+
+graphs       SASS trace -> Heterogeneous Relational Graph (HRG)
+augment      contrastive views (node drop / edge drop / feature noise)
+rgcn         RGCN encoder + projection head (features built in-model)
+contrastive  symmetric InfoNCE
+train        distributed contrastive trainer
+clustering   K-Means + silhouette K-selection
+sampler      end-to-end GCL-Sampler pipeline
+baselines    PKA / Sieve / STEM+ROOT
+"""
+
+from repro.core.graphs import KernelGraph, build_kernel_graph, pad_batch
+from repro.core.sampler import GCLSampler, GCLSamplerConfig

@@ -1,0 +1,51 @@
+"""Graph augmentation pool (paper §3.3.1): node dropping (15%), edge dropping
+(15%), feature noise (sigma=0.01).  For each graph one or two strategies are
+applied stochastically per view.  All jit-friendly: augmentation = masks +
+a noise flag, applied on top of the padded batch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NODE_DROP_RATE = 0.15
+EDGE_DROP_RATE = 0.15
+
+# the 6 subsets of {node_drop, edge_drop, noise} of size 1 or 2
+_COMBOS = jnp.array(
+    [
+        [1, 0, 0], [0, 1, 0], [0, 0, 1],
+        [1, 1, 0], [1, 0, 1], [0, 1, 1],
+    ],
+    jnp.float32,
+)
+
+
+def augment_view(rng, batch):
+    """Returns (aug_batch, use_noise (B,) float mask)."""
+    B, N = batch["node_mask"].shape
+    E = batch["edge_mask"].shape[1]
+    r_combo, r_node, r_edge = jax.random.split(rng, 3)
+    combo = jax.random.randint(r_combo, (B,), 0, _COMBOS.shape[0])
+    flags = _COMBOS[combo]  # (B,3) node/edge/noise
+
+    node_keep = jax.random.bernoulli(r_node, 1 - NODE_DROP_RATE, (B, N))
+    node_keep = jnp.where(flags[:, 0:1] > 0, node_keep, True)
+    edge_keep = jax.random.bernoulli(r_edge, 1 - EDGE_DROP_RATE, (B, E))
+    edge_keep = jnp.where(flags[:, 1:2] > 0, edge_keep, True)
+
+    node_mask = batch["node_mask"] * node_keep
+    src_keep = jnp.take_along_axis(node_mask, batch["edge_src"], axis=1)
+    dst_keep = jnp.take_along_axis(node_mask, batch["edge_dst"], axis=1)
+    edge_mask = batch["edge_mask"] * edge_keep * src_keep * dst_keep
+
+    out = dict(batch)
+    out["node_mask"] = node_mask
+    out["edge_mask"] = edge_mask
+    return out, flags[:, 2]
+
+
+def apply_feature_noise(rng, h, use_noise, sigma):
+    """Per-graph gated Gaussian feature noise (B,) gate."""
+    noise = sigma * jax.random.normal(rng, h.shape)
+    return h + noise * use_noise[:, None, None]

@@ -1,0 +1,3 @@
+from repro.core.baselines.pka import pka_plan
+from repro.core.baselines.sieve import sieve_plan
+from repro.core.baselines.stem_root import stem_root_plan

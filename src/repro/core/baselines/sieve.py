@@ -1,0 +1,58 @@
+"""Sieve (ISPASS'23) baseline.
+
+Strict kernel-name partitioning, then per-name stratification on dynamic
+instruction count when its coefficient of variation (CoV) is high; the
+representative is the first kernel with the maximum CTA count in each
+stratum, weighted by stratum size.
+
+Name-keyed grouping is Sieve's crippling constraint on workloads whose
+invocations carry distinct names (nw / lu / 3mm): every kernel becomes its
+own cluster and no reduction is possible.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.sampler import SamplingPlan
+from repro.tracing.programs import Program
+
+COV_THRESHOLD = 0.10
+
+
+def sieve_plan(program: Program, platform="P1") -> SamplingPlan:
+    names = [k.name for k in program.kernels]
+    instrs = np.array([k.stats(platform).warp_instructions for k in program.kernels])
+    ctas = np.array([k.stats(platform).ctas for k in program.kernels])
+    seqs = np.array([k.seq for k in program.kernels])
+
+    labels = np.full(len(names), -1, int)
+    next_label = 0
+    reps: dict[int, list[int]] = {}
+    for name in sorted(set(names)):
+        idx = np.array([i for i, n in enumerate(names) if n == name])
+        vals = instrs[idx]
+
+        # recursive CoV stratification: split at the largest relative gap
+        # until every stratum's instruction-count CoV is below threshold
+        # (keeps near-identical counts together regardless of group size).
+        def stratify(members):
+            v = instrs[members]
+            if len(members) < 2 or v.std() / max(v.mean(), 1e-9) <= COV_THRESHOLD:
+                return [members]
+            order = members[np.argsort(instrs[members])]
+            sv = instrs[order]
+            rel_gap = (sv[1:] - sv[:-1]) / np.maximum(sv[:-1], 1e-9)
+            cut = int(np.argmax(rel_gap)) + 1
+            return stratify(order[:cut]) + stratify(order[cut:])
+
+        strata = stratify(idx)
+        for stratum in strata:
+            labels[stratum] = next_label
+            # first kernel with the maximum CTA count (original Sieve rule)
+            c = ctas[stratum]
+            cand = stratum[c == c.max()]
+            rep = cand[np.argmin(seqs[cand])]
+            reps[next_label] = [int(rep)]
+            next_label += 1
+    return SamplingPlan(labels=labels, reps=reps, method="Sieve")

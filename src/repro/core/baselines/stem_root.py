@@ -1,0 +1,62 @@
+"""STEM+ROOT (2025) baseline.
+
+Name-keyed grouping like Sieve, but the per-name signature is the *profiled
+execution-time distribution*: fine-grained hierarchical clustering (1-d
+single-link with a relative gap threshold), then ROOT's statistical error
+model picks MULTIPLE representatives per cluster:
+
+    n_c = ceil((z * cov_c / eps)^2),  z = 1.96, eps = 0.25 (paper setup)
+
+spread evenly over the cluster.  Consistently low error, at the cost of a
+much larger representative set (the paper's 56.57x vs 258.94x speedup gap).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim.simulate import SamplingPlan
+from repro.tracing.programs import Program
+from repro.sim.hardware import PLATFORMS
+from repro.sim.timing import simulate_kernel
+
+Z_SCORE = 1.96
+GAP_REL = 0.15  # relative gap threshold for splitting time clusters
+
+
+def stem_root_plan(program: Program, platform="P1", eps=0.25) -> SamplingPlan:
+    hw = PLATFORMS[platform]
+    times = np.array(
+        [simulate_kernel(k.stats(platform), hw).time_s for k in program.kernels]
+    )
+    names = [k.name for k in program.kernels]
+    seqs = np.array([k.seq for k in program.kernels])
+
+    labels = np.full(len(names), -1, int)
+    reps: dict[int, list[int]] = {}
+    next_label = 0
+    for name in sorted(set(names)):
+        idx = np.array([i for i, n in enumerate(names) if n == name])
+        order = idx[np.argsort(times[idx])]
+        t = times[order]
+        # STEM: hierarchical 1-d split at large relative gaps
+        clusters = [[order[0]]]
+        for j in range(1, len(order)):
+            prev_t = times[clusters[-1][-1]]
+            if prev_t > 0 and (t[j] - prev_t) / max(prev_t, 1e-12) > GAP_REL:
+                clusters.append([])
+            clusters[-1].append(order[j])
+        for members in clusters:
+            members = np.asarray(members)
+            labels[members] = next_label
+            mt = times[members]
+            cov = mt.std() / max(mt.mean(), 1e-12)
+            # ROOT: sample size from the statistical error model
+            n_rep = int(np.ceil((Z_SCORE * cov / eps) ** 2))
+            n_rep = int(np.clip(n_rep, 1, len(members)))
+            # spread representatives evenly across the sorted cluster
+            pos = np.linspace(0, len(members) - 1, n_rep).round().astype(int)
+            chosen = members[np.argsort(times[members])][pos]
+            reps[next_label] = sorted(int(c) for c in set(chosen.tolist()))
+            next_label += 1
+    return SamplingPlan(labels=labels, reps=reps, method="STEM+ROOT")

@@ -1,0 +1,168 @@
+"""K-Means + silhouette K-selection (paper §3.4).
+
+TPU-native formulation: distances are dense matmuls (|x|^2 - 2xc^T + |c|^2);
+Lloyd iterations are jit'd.  K selection maximizes the silhouette
+coefficient, preferring the smaller K on near-ties; degenerate structure
+(all kernels essentially identical -> max silhouette below threshold)
+collapses to K=1, and tiny programs (n <= 4) fall back to distance-threshold
+agglomeration (silhouette is uninformative over singletons).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _pairwise_sq(x, c):
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)
+    return jnp.maximum(x2 - 2 * x @ c.T + c2[None], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "use_pallas"))
+def _kmeans_run(x, init_idx, k: int, iters: int = 50, use_pallas: bool = False):
+    cent = x[init_idx]
+
+    def assign(cent):
+        if use_pallas:  # blocked MXU kernel (interpret=True on CPU)
+            from repro.kernels.kmeans_assign.ops import kmeans_assign
+
+            return kmeans_assign(x, cent, interpret=True)
+        d = _pairwise_sq(x, cent)
+        return jnp.argmin(d, axis=1), jnp.min(d, axis=1)
+
+    def body(cent, _):
+        lab, _ = assign(cent)
+        onehot = jax.nn.one_hot(lab, k, dtype=x.dtype)
+        sums = onehot.T @ x
+        cnts = onehot.sum(0)[:, None]
+        new = jnp.where(cnts > 0, sums / jnp.maximum(cnts, 1), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(body, cent, None, length=iters)
+    lab, mind = assign(cent)
+    inertia = jnp.sum(mind)
+    return lab, cent, inertia
+
+
+def _kmeanspp_init(x, k, seed):
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    idx = [int(rng.integers(n))]
+    d = np.sum((x - x[idx[0]]) ** 2, axis=1)
+    for _ in range(1, k):
+        tot = d.sum()
+        if not np.isfinite(tot) or tot <= 1e-20:
+            nxt = int(rng.integers(n))  # degenerate: all points coincide
+        else:
+            nxt = int(rng.choice(n, p=d / tot))
+        idx.append(nxt)
+        d = np.minimum(d, np.sum((x - x[nxt]) ** 2, axis=1))
+    return np.array(idx)
+
+
+def kmeans(x: np.ndarray, k: int, seed: int = 0, iters: int = 50,
+           use_pallas: bool = False):
+    """Returns (labels (n,), centroids (k,d), inertia)."""
+    x = np.asarray(x, np.float32)
+    if k >= len(x):
+        return np.arange(len(x)), x.copy(), 0.0
+    init = _kmeanspp_init(x, k, seed)
+    lab, cent, inertia = _kmeans_run(jnp.asarray(x), jnp.asarray(init), k,
+                                     iters, use_pallas)
+    return np.asarray(lab), np.asarray(cent), float(inertia)
+
+
+@jax.jit
+def _silhouette_jit(x, lab_onehot):
+    """Mean silhouette; clusters of size 1 contribute s=0."""
+    d = jnp.sqrt(_pairwise_sq(x, x))
+    cnt = lab_onehot.sum(0)  # (k,)
+    sums = d @ lab_onehot    # (n,k) total distance to each cluster
+    own_cnt = lab_onehot @ cnt  # (n,)
+    own_sum = jnp.sum(sums * lab_onehot, axis=1)
+    a = own_sum / jnp.maximum(own_cnt - 1, 1)
+    mean_other = sums / jnp.maximum(cnt[None, :], 1)
+    mean_other = jnp.where(lab_onehot > 0, jnp.inf, mean_other)
+    mean_other = jnp.where(cnt[None, :] > 0, mean_other, jnp.inf)
+    b = jnp.min(mean_other, axis=1)
+    s = (b - a) / jnp.maximum(jnp.maximum(a, b), 1e-12)
+    s = jnp.where(own_cnt > 1, s, 0.0)  # singleton convention
+    return jnp.mean(s)
+
+
+def silhouette(x: np.ndarray, labels: np.ndarray) -> float:
+    k = int(labels.max()) + 1
+    onehot = jax.nn.one_hot(jnp.asarray(labels), k, dtype=jnp.float32)
+    return float(_silhouette_jit(jnp.asarray(x, jnp.float32), onehot))
+
+
+def _agglomerate_threshold(x, thresh=0.25):
+    """Tiny-n fallback: single-link merge on relative euclidean distance."""
+    n = len(x)
+    labels = np.arange(n)
+    scale = np.mean(np.linalg.norm(x, axis=1)) + 1e-9
+    for i in range(n):
+        for j in range(i + 1, n):
+            if np.linalg.norm(x[i] - x[j]) / scale < thresh:
+                labels[labels == labels[j]] = labels[i]
+    _, labels = np.unique(labels, return_inverse=True)
+    return labels
+
+
+def select_k_and_cluster(
+    x: np.ndarray,
+    k_max: int = 48,
+    seed: int = 0,
+    sil_floor: float = 0.20,
+    tie_tol: float = 0.02,
+    tiny_n: int = 4,
+    sil_cap: int = 1200,
+):
+    """Paper's K-selection: maximize silhouette, prefer smaller K on ties;
+    returns (labels, info).  Silhouette is scored on a deterministic
+    subsample when n > sil_cap (standard O(n^2) mitigation)."""
+    x = np.asarray(x, np.float32)
+    n = len(x)
+    if n <= 1:
+        return np.zeros(n, int), {"k": max(n, 0), "sil": 1.0, "mode": "trivial"}
+    if n <= tiny_n:
+        labels = _agglomerate_threshold(x)
+        return labels, {"k": int(labels.max()) + 1, "sil": 1.0, "mode": "tiny"}
+
+    sil_idx = None
+    if n > sil_cap:
+        sil_idx = np.random.default_rng(seed).choice(n, sil_cap, replace=False)
+
+    ks = [k for k in range(2, min(k_max, n - 1) + 1)]
+    results = {}
+    scores = {}
+    for k in ks:
+        lab, cent, _ = kmeans(x, k, seed=seed)
+        # re-label compactly (empty clusters possible)
+        _, lab = np.unique(lab, return_inverse=True)
+        if lab.max() == 0:
+            continue
+        results[k] = lab
+        if sil_idx is not None:
+            sl = lab[sil_idx]
+            if sl.max() == sl.min():
+                continue
+            _, sl = np.unique(sl, return_inverse=True)
+            scores[k] = silhouette(x[sil_idx], sl)
+        else:
+            scores[k] = silhouette(x, lab)
+    if not scores:
+        return np.zeros(n, int), {"k": 1, "sil": 0.0, "mode": "degenerate"}
+    best = max(scores.values())
+    if best < sil_floor:
+        return np.zeros(n, int), {"k": 1, "sil": best, "mode": "weak->K=1"}
+    chosen = min(k for k, s in scores.items() if s >= best - tie_tol)
+    return results[chosen], {
+        "k": int(results[chosen].max()) + 1, "sil": scores[chosen],
+        "mode": "silhouette", "scores": scores,
+    }

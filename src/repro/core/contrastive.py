@@ -1,0 +1,27 @@
+"""Symmetric InfoNCE / NT-Xent (paper §3.3.3, eqs. 2-4)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2_normalize(z, eps=1e-8):
+    return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), eps)
+
+
+def info_nce(z1, z2, tau: float):
+    """z1, z2: (B, d) projected views.  Returns (loss, metrics)."""
+    z1 = l2_normalize(z1)
+    z2 = l2_normalize(z2)
+    S = (z1 @ z2.T) / tau  # eq. 2
+
+    def ce(S):  # eq. 3
+        return -jnp.mean(jnp.diag(jax.nn.log_softmax(S, axis=-1)))
+
+    loss = 0.5 * (ce(S) + ce(S.T))  # eq. 4
+    B = S.shape[0]
+    acc = jnp.mean(jnp.argmax(S, axis=-1) == jnp.arange(B))
+    pos = jnp.mean(jnp.diag(S)) * tau
+    neg = (jnp.sum(S) - jnp.trace(S)) / jnp.maximum(B * (B - 1), 1) * tau
+    return loss, {"nce_acc": acc, "pos_sim": pos, "neg_sim": neg}

@@ -1,0 +1,213 @@
+"""RGCN encoder with basis decomposition + projection head (paper §3.3.2).
+
+Architecture (faithful): 3 relational conv layers, input 64 / hidden 128 /
+output 256, basis decomposition per layer, LayerNorm + ReLU + Dropout (last
+layer keeps the full representation — no dropout), mean-pool readout to warp
+embeddings, warp-mean to the kernel embedding z_k in R^256.  Training-time
+projection head: 256 -> 128 (ReLU, dropout) -> 64.
+
+Node features are built in-model (paper §3.3.1):
+  instruction: 64-d token embedding + positional encoding of normalized PC
+  variable:    32-d token embedding ++ 8-d dynamic-value summary -> 40, pad 64
+  pseudo:      16-d token embedding, pad 64
+
+TPU adaptation (DESIGN.md §3): messages use the basis trick — one dense
+(B,N,D)x(nb,D,O) einsum on the MXU, per-edge relation coefficients, then a
+segment-sum aggregation; the Pallas kernel (kernels/rgcn_spmm) implements the
+sorted-edge blocked version of the same contraction.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graphs import NUM_RELATIONS
+from repro.tracing.isa import NUM_OPCODES, PSEUDO_KINDS, VAR_KINDS
+
+
+@dataclass(frozen=True)
+class RGCNConfig:
+    dims: tuple = (64, 128, 128, 256)
+    num_bases: int = 2
+    num_relations: int = NUM_RELATIONS
+    proj_hidden: int = 128
+    proj_out: int = 64
+    dropout: float = 0.1
+    feat_noise_sigma: float = 0.01
+    use_pallas: bool = False          # dispatch rgcn_spmm kernel (interpret on CPU)
+    message_dtype: str = "float32"    # 'bfloat16' halves message-passing traffic
+    # ablation switches (benchmarks/bench_ablations.py)
+    use_vstats: bool = True           # dynamic-value summary features
+    relations_used: tuple = (0, 1, 2, 3)  # subset of edge relations
+
+
+def init_rgcn(key, rc: RGCNConfig):
+    ks = iter(jax.random.split(key, 4 * len(rc.dims) + 8))
+    p = {
+        "embed_instr": jax.random.normal(next(ks), (NUM_OPCODES, 64)) * 0.1,
+        "embed_var": jax.random.normal(next(ks), (len(VAR_KINDS), 32)) * 0.1,
+        "embed_pseudo": jax.random.normal(next(ks), (len(PSEUDO_KINDS), 16)) * 0.1,
+        "layers": [],
+    }
+    for li in range(len(rc.dims) - 1):
+        din, dout = rc.dims[li], rc.dims[li + 1]
+        p["layers"].append(
+            {
+                "basis": jax.random.normal(next(ks), (rc.num_bases, din, dout))
+                / np.sqrt(din),
+                "comb": jax.random.normal(next(ks), (rc.num_relations, rc.num_bases))
+                / np.sqrt(rc.num_bases),
+                "w0": jax.random.normal(next(ks), (din, dout)) / np.sqrt(din),
+                "b": jnp.zeros((dout,)),
+                "ln_scale": jnp.ones((dout,)),
+                "ln_bias": jnp.zeros((dout,)),
+            }
+        )
+    p["proj"] = {
+        "w1": jax.random.normal(next(ks), (rc.dims[-1], rc.proj_hidden))
+        / np.sqrt(rc.dims[-1]),
+        "b1": jnp.zeros((rc.proj_hidden,)),
+        "w2": jax.random.normal(next(ks), (rc.proj_hidden, rc.proj_out))
+        / np.sqrt(rc.proj_hidden),
+        "b2": jnp.zeros((rc.proj_out,)),
+    }
+    return p
+
+
+def _positional_encoding(pc_norm, dim):
+    """Sinusoidal PE of normalized PC (B,N) -> (B,N,dim)."""
+    half = dim // 2
+    freqs = jnp.exp(jnp.arange(half) * (-np.log(10_000.0) / half))
+    ang = pc_norm[..., None] * 1000.0 * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _stats_encode(vstats):
+    # signed sqrt: compresses large dynamic values less aggressively than a
+    # second log (addresses are already ~footprint-scaled), so problem-size
+    # differences survive the mean-pool readout.
+    return jnp.sign(vstats) * jnp.sqrt(jnp.abs(vstats)) * 0.3
+
+
+def node_features(p, rc: RGCNConfig, batch, noise_rng=None):
+    tok = batch["token"]
+    ntype = batch["node_type"]
+    instr = jnp.take(p["embed_instr"], jnp.clip(tok, 0, NUM_OPCODES - 1), axis=0)
+    instr = instr + _positional_encoding(batch["pc_norm"], 64)
+    var32 = jnp.take(p["embed_var"], jnp.clip(tok, 0, len(VAR_KINDS) - 1), axis=0)
+    vstats = batch["vstats"] if rc.use_vstats else jnp.zeros_like(batch["vstats"])
+    var = jnp.concatenate(
+        [var32, _stats_encode(vstats),
+         jnp.zeros(var32.shape[:-1] + (64 - 40,))], axis=-1,
+    )
+    pse16 = jnp.take(p["embed_pseudo"], jnp.clip(tok, 0, len(PSEUDO_KINDS) - 1), axis=0)
+    pseudo = jnp.concatenate([pse16, jnp.zeros(pse16.shape[:-1] + (48,))], axis=-1)
+    h = jnp.where(
+        (ntype == 0)[..., None], instr,
+        jnp.where((ntype == 1)[..., None], pseudo, var),
+    )
+    if noise_rng is not None:
+        h = h + rc.feat_noise_sigma * jax.random.normal(noise_rng, h.shape)
+    return h * batch["node_mask"][..., None]
+
+
+def _rgcn_layer(lp, rc: RGCNConfig, h, batch, *, last, rng=None, train=False):
+    B, N, _ = h.shape
+    E = batch["edge_src"].shape[1]
+    R = rc.num_relations
+    src, dst, etype = batch["edge_src"], batch["edge_dst"], batch["edge_type"]
+    emask = batch["edge_mask"]
+    if tuple(rc.relations_used) != (0, 1, 2, 3):
+        keep = jnp.isin(etype, jnp.asarray(rc.relations_used))
+        emask = emask * keep
+
+    # per-(dst, relation) in-degree for normalization 1/|N_r(v)|
+    key = dst * R + etype
+    deg = jax.vmap(lambda k, m: jax.ops.segment_sum(m, k, num_segments=N * R))(
+        key, emask
+    )
+    norm = 1.0 / jnp.maximum(jnp.take_along_axis(deg, key, axis=1), 1.0)
+
+    if rc.use_pallas:
+        from repro.kernels.rgcn_spmm.ops import rgcn_message_agg
+
+        coef = jnp.take(lp["comb"], etype, axis=0)  # (B,E,nb)
+        w = coef * (emask * norm)[..., None]
+        agg = rgcn_message_agg(
+            h, lp["basis"], src, dst, w, N, True,
+        )
+    else:
+        # gather-first + aggregate-then-transform: the basis contraction is
+        # applied ONCE per (node, basis) after aggregation, so the expensive
+        # (D x O) matmul runs on (B,N,nb,D) instead of per-edge payloads and
+        # the gather/scatter payload is D, not nb*O.
+        mdt = jnp.dtype(rc.message_dtype)
+        h_m = h.astype(mdt)
+        h_src = jnp.take_along_axis(h_m, src[:, :, None], axis=1)  # (B,E,D)
+        coef = jnp.take(lp["comb"], etype, axis=0)  # (B,E,nb)
+        w = (coef * (emask * norm)[..., None]).astype(mdt)  # (B,E,nb)
+        weighted = h_src[:, :, None, :] * w[..., None]  # (B,E,nb,D)
+        s = jax.vmap(
+            lambda m, d: jax.ops.segment_sum(m, d, num_segments=N)
+        )(weighted, dst)                            # (B,N,nb,D)
+        agg = jnp.einsum("bnkd,kdo->bno", s, lp["basis"].astype(mdt),
+                         preferred_element_type=jnp.float32)
+
+    out = agg + h @ lp["w0"] + lp["b"]
+    # LayerNorm
+    mu = out.mean(-1, keepdims=True)
+    sig = out.var(-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(sig + 1e-5) * lp["ln_scale"] + lp["ln_bias"]
+    out = jax.nn.relu(out)
+    if not last and train and rng is not None and rc.dropout > 0:
+        keep = jax.random.bernoulli(rng, 1 - rc.dropout, out.shape)
+        out = out * keep / (1 - rc.dropout)
+    return out * batch["node_mask"][..., None]
+
+
+def encode(p, rc: RGCNConfig, batch, max_warps: int, *, rng=None, train=False,
+           noise_gate=None):
+    """Graphs -> kernel embeddings z_k (B, dims[-1]).  noise_gate: optional
+    (B,) per-graph gate for the feature-noise augmentation."""
+    if rng is not None:
+        rngs = jax.random.split(rng, len(rc.dims))
+    else:
+        rngs = [None] * len(rc.dims)
+    h = node_features(p, rc, batch)
+    if noise_gate is not None and rngs[-1] is not None:
+        from repro.core.augment import apply_feature_noise
+
+        h = apply_feature_noise(rngs[-1], h, noise_gate, rc.feat_noise_sigma)
+        h = h * batch["node_mask"][..., None]
+    for li, lp in enumerate(p["layers"]):
+        h = _rgcn_layer(
+            lp, rc, h, batch, last=(li == len(p["layers"]) - 1),
+            rng=rngs[li], train=train,
+        )
+    # warp mean-pool readout, then mean over warps
+    wid = batch["warp_id"]
+    nmask = batch["node_mask"]
+    sums = jax.vmap(
+        lambda hh, w, m: jax.ops.segment_sum(hh * m[:, None], w, num_segments=max_warps)
+    )(h, wid, nmask)
+    cnts = jax.vmap(
+        lambda w, m: jax.ops.segment_sum(m, w, num_segments=max_warps)
+    )(wid, nmask)
+    warp_mean = sums / jnp.maximum(cnts, 1.0)[..., None]
+    valid = (cnts > 0).astype(h.dtype)
+    zk = jnp.sum(warp_mean * valid[..., None], axis=1) / jnp.maximum(
+        jnp.sum(valid, axis=1, keepdims=True), 1.0
+    )
+    return zk
+
+
+def project(p, rc: RGCNConfig, zk, *, rng=None, train=False):
+    h = jax.nn.relu(zk @ p["proj"]["w1"] + p["proj"]["b1"])
+    if train and rng is not None and rc.dropout > 0:
+        keep = jax.random.bernoulli(rng, 1 - rc.dropout, h.shape)
+        h = h * keep / (1 - rc.dropout)
+    return h @ p["proj"]["w2"] + p["proj"]["b2"]

@@ -1,0 +1,97 @@
+"""GCL-Sampler end-to-end pipeline (paper Fig. 2):
+
+  program -> NVBit-like traces -> HRGs -> RGCN contrastive training ->
+  kernel embeddings z_k -> K-Means (silhouette K) -> representatives
+  (first invocation per cluster) -> SamplingPlan.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.clustering import select_k_and_cluster
+from repro.core.graphs import KernelGraph, build_kernel_graph
+from repro.core.rgcn import RGCNConfig
+from repro.core.train import ContrastiveTrainer, GCLTrainConfig
+from repro.sim.simulate import SamplingPlan
+from repro.tracing.programs import Program
+
+
+@dataclass(frozen=True)
+class GCLSamplerConfig:
+    cap_warps: int = 2
+    cap_instr: int = 96
+    k_max: int = 48
+    rgcn: RGCNConfig = field(default_factory=RGCNConfig)
+    train: GCLTrainConfig = field(default_factory=GCLTrainConfig)
+    train_subsample: int = 400   # cap on kernels used for contrastive training
+
+
+def plan_from_labels(labels: np.ndarray, seqs: np.ndarray, method: str,
+                     extra=None) -> SamplingPlan:
+    """Representative = first invocation (min seq) in each cluster."""
+    reps = {}
+    for c in np.unique(labels):
+        members = np.nonzero(labels == c)[0]
+        first = members[np.argmin(seqs[members])]
+        reps[int(c)] = [int(first)]
+    return SamplingPlan(labels=np.asarray(labels), reps=reps, method=method,
+                        extra=extra or {})
+
+
+class GCLSampler:
+    def __init__(self, cfg: GCLSamplerConfig = None):
+        self.cfg = cfg or GCLSamplerConfig()
+        self.trainer = ContrastiveTrainer(self.cfg.rgcn, self.cfg.train)
+        self.params = None
+
+    # -- stages --------------------------------------------------------------
+    def build_graphs(self, program: Program) -> list[KernelGraph]:
+        c = self.cfg
+        return [
+            build_kernel_graph(k.trace(c.cap_warps, c.cap_instr))
+            for k in program.kernels
+        ]
+
+    def train(self, graphs: list[KernelGraph], verbose=False):
+        rng = np.random.default_rng(self.cfg.train.seed)
+        if len(graphs) > self.cfg.train_subsample:
+            sel = rng.choice(len(graphs), self.cfg.train_subsample, replace=False)
+            train_graphs = [graphs[i] for i in sel]
+        else:
+            train_graphs = graphs
+        self.params, info = self.trainer.fit(train_graphs, verbose=verbose)
+        return info
+
+    def embed(self, graphs: list[KernelGraph]) -> np.ndarray:
+        assert self.params is not None, "call train() first"
+        return self.trainer.embed(self.params, graphs)
+
+    def cluster(self, embeddings: np.ndarray, seqs: np.ndarray) -> SamplingPlan:
+        labels, info = select_k_and_cluster(
+            embeddings, k_max=self.cfg.k_max, seed=self.cfg.train.seed
+        )
+        return plan_from_labels(labels, seqs, "GCL-Sampler", extra=info)
+
+    # -- end-to-end ------------------------------------------------------------
+    def fit(self, program: Program, verbose=False) -> SamplingPlan:
+        t0 = time.time()
+        graphs = self.build_graphs(program)
+        t1 = time.time()
+        train_info = self.train(graphs, verbose=verbose)
+        t2 = time.time()
+        emb = self.embed(graphs)
+        t3 = time.time()
+        seqs = np.array([k.seq for k in program.kernels])
+        plan = self.cluster(emb, seqs)
+        plan.extra.update(
+            train=train_info,
+            timings={
+                "graphs_s": t1 - t0, "train_s": t2 - t1,
+                "embed_s": t3 - t2, "cluster_s": time.time() - t3,
+            },
+        )
+        return plan

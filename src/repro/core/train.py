@@ -1,0 +1,164 @@
+"""Distributed contrastive trainer for the RGCN encoder (paper §3.3, §4).
+
+Training config mirrors the paper: AdamW, lr 7e-4 with cosine annealing,
+temperature tau=0.05, 80/20 train/validation split of the program's kernels.
+
+Distribution: batches shard over the mesh's batch axes; the InfoNCE logits
+matrix z1 @ z2^T makes GSPMD all-gather the projected embeddings — global
+negatives across data shards (SimCLR-at-scale adaptation, DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import TrainConfig
+from repro.core import rgcn as rgcn_mod
+from repro.core.augment import augment_view
+from repro.core.contrastive import info_nce
+from repro.core.graphs import KernelGraph, pad_batch
+from repro.core.rgcn import RGCNConfig
+from repro.distributed.sharding import MeshRules, constrain, set_mesh_rules
+from repro.optim import TrainState, adamw_init, apply_gradients
+
+
+@dataclass(frozen=True)
+class GCLTrainConfig:
+    steps: int = 120
+    batch_size: int = 16
+    tau: float = 0.05
+    val_fraction: float = 0.2
+    log_every: int = 50
+    seed: int = 0
+    opt: TrainConfig = field(
+        default_factory=lambda: TrainConfig(
+            learning_rate=7e-4, weight_decay=0.01, warmup_steps=20,
+            total_steps=120, schedule="cosine", grad_clip=1.0,
+        )
+    )
+
+
+class ContrastiveTrainer:
+    def __init__(self, rc: RGCNConfig, tc: GCLTrainConfig,
+                 mesh_rules: Optional[MeshRules] = None):
+        self.rc = rc
+        self.tc = tc
+        self.mesh_rules = mesh_rules
+        self._step_fn = None
+        self._embed_fn = None
+
+    # -- loss ---------------------------------------------------------------
+    def _loss(self, params, batch, max_warps, rng):
+        r1, r2, rp1, rp2 = jax.random.split(rng, 4)
+        v1, noise1 = augment_view(r1, batch)
+        v2, noise2 = augment_view(r2, batch)
+        z1 = rgcn_mod.encode(params, self.rc, v1, max_warps, rng=r1,
+                             train=True, noise_gate=noise1)
+        z2 = rgcn_mod.encode(params, self.rc, v2, max_warps, rng=r2,
+                             train=True, noise_gate=noise2)
+        p1 = rgcn_mod.project(params, self.rc, z1, rng=rp1, train=True)
+        p2 = rgcn_mod.project(params, self.rc, z2, rng=rp2, train=True)
+        return info_nce(p1, p2, self.tc.tau)
+
+    def _make_step(self, max_warps):
+        tc = self.tc
+
+        def step(state: TrainState, batch, rng):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: self._loss(p, batch, max_warps, rng), has_aux=True
+            )(state.params)
+            state, opt_metrics = apply_gradients(state, grads, tc.opt)
+            metrics = dict(metrics, loss=loss, **opt_metrics)
+            return state, metrics
+
+        return jax.jit(step, donate_argnums=(0,))
+
+    # -- data ---------------------------------------------------------------
+    @staticmethod
+    def prepad(graphs: list[KernelGraph], pad_to=None):
+        batch, max_warps = pad_batch(graphs, *(pad_to or (None, None, None)))
+        return batch, max_warps
+
+    def fit(self, graphs: list[KernelGraph], verbose=False):
+        """Train on an 80/20 split of the program's kernels; returns
+        (params, history)."""
+        tc, rc = self.tc, self.rc
+        rng_np = np.random.default_rng(tc.seed)
+        n = len(graphs)
+        perm = rng_np.permutation(n)
+        n_val = max(1, int(n * tc.val_fraction)) if n >= 5 else 0
+        train_idx = perm[n_val:] if n_val else perm
+        val_idx = perm[:n_val]
+
+        full, max_warps = self.prepad(graphs)
+        full = {k: np.asarray(v) for k, v in full.items()}
+
+        key = jax.random.PRNGKey(tc.seed)
+        key, k_init = jax.random.split(key)
+        params = rgcn_mod.init_rgcn(k_init, rc)
+        state = adamw_init(params, tc.opt)
+        step_fn = self._make_step(max_warps)
+
+        history = []
+        bs = min(tc.batch_size, len(train_idx))
+        ctx = set_mesh_rules(self.mesh_rules) if self.mesh_rules else None
+        if ctx:
+            ctx.__enter__()
+        try:
+            t0 = time.time()
+            for step in range(tc.steps):
+                idx = rng_np.choice(len(train_idx), size=bs,
+                                    replace=len(train_idx) < bs)
+                sel = train_idx[idx]
+                batch = {k: jnp.asarray(v[sel]) for k, v in full.items()}
+                key, k_step = jax.random.split(key)
+                state, metrics = step_fn(state, batch, k_step)
+                if verbose and (step % tc.log_every == 0 or step == tc.steps - 1):
+                    m = {k: float(v) for k, v in metrics.items()}
+                    print(
+                        f"  step {step:4d} loss={m['loss']:.4f} "
+                        f"acc={m['nce_acc']:.3f} lr={m['lr']:.2e} "
+                        f"({time.time() - t0:.1f}s)"
+                    )
+                history.append({k: float(v) for k, v in metrics.items()})
+        finally:
+            if ctx:
+                ctx.__exit__(None, None, None)
+
+        # validation InfoNCE (no dropout/noise, fixed augs)
+        val = {}
+        if n_val:
+            vb = {k: jnp.asarray(v[val_idx]) for k, v in full.items()}
+            loss, m = jax.jit(
+                lambda p, b, r: self._loss(p, b, max_warps, r)
+            )(state.params, vb, jax.random.PRNGKey(123))
+            val = {"val_loss": float(loss), "val_acc": float(m["nce_acc"])}
+        return state.params, {"history": history, "max_warps": max_warps, **val}
+
+    # -- inference ----------------------------------------------------------
+    def embed(self, params, graphs: list[KernelGraph], batch_size=64,
+              pad_shapes=None) -> np.ndarray:
+        """256-d kernel embeddings for all graphs (paper §3.4 uses z_k,
+        not the projection head output)."""
+        full, max_warps = self.prepad(graphs, pad_shapes)
+        full = {k: np.asarray(v) for k, v in full.items()}
+        n = len(graphs)
+        if self._embed_fn is None:
+            self._embed_fn = {}
+        if max_warps not in self._embed_fn:
+            self._embed_fn[max_warps] = jax.jit(
+                lambda p, b, mw=max_warps: rgcn_mod.encode(p, self.rc, b, mw),
+            )
+        fn = self._embed_fn[max_warps]
+        outs = []
+        for i in range(0, n, batch_size):
+            sel = slice(i, min(i + batch_size, n))
+            batch = {k: jnp.asarray(v[sel]) for k, v in full.items()}
+            outs.append(np.asarray(fn(params, batch)))
+        return np.concatenate(outs, axis=0)

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (
+    MeshRules,
+    constrain,
+    set_mesh_rules,
+    current_rules,
+    spec_for,
+    param_shardings,
+)

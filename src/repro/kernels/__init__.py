@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+flash_attention  GQA causal attention, online softmax, KV-block streaming
+rgcn_spmm        RGCN message aggregation as MXU one-hot matmuls (TPU-native
+                 adaptation of scatter-gather SpMM; DESIGN.md §3)
+ssd_scan         Mamba-2/SSD intra-chunk compute (per-chunk MXU matmuls)
+
+Each kernel ships <name>/kernel.py (pl.pallas_call + BlockSpec),
+<name>/ops.py (jit'd wrapper + custom_vjp fallback), <name>/ref.py
+(pure-jnp oracle).  All are validated against their oracle in interpret
+mode on CPU (tests/test_kernels_*.py); `interpret=False` targets real TPUs.
+"""

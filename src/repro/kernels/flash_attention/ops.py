@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+Forward runs the Pallas kernel (interpret=True executes the kernel body on
+CPU for validation; False targets TPU).  Backward falls back to the jnp
+oracle via custom_vjp — training through the kernel stays differentiable
+while serving gets the fused forward.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, scale: float = 1.0, interpret: bool = False):
+    return flash_attention_fwd(q, k, v, scale=scale, interpret=interpret)
+
+
+def _fwd(q, k, v, scale, interpret):
+    out = flash_attention_fwd(q, k, v, scale=scale, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _bwd(scale, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: attention_ref(q_, k_, v_, scale), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

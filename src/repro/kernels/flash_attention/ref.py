@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for GQA causal flash attention.
+
+q: (B, S, K, G, hd) grouped queries; k, v: (B, S, K, hd).
+Returns (B, S, K, G, hd).  fp32 softmax, causal mask.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, scale: float):
+    B, S, K, G, hd = q.shape
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(q.dtype), v)
+    return out

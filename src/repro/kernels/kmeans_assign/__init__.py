@@ -1,0 +1,1 @@
+from repro.kernels.kmeans_assign.ops import kmeans_assign

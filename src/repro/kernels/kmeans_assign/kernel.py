@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: blocked K-Means assignment (paper §3.4 at scale).
+
+At framework scale the sampler clusters millions of kernel embeddings
+(every invocation of every program in a fleet trace), so assignment is a
+streaming (n x d) x (d x k) MXU matmul with a fused row argmin — no (n, k)
+distance matrix ever hits HBM.
+
+Grid: (n / block_n,).  BlockSpecs: x (block_n, d) streams; centroids (k, d)
+stay resident (k <= a few hundred, d = 256: ~0.25 MB).  block_n = 512 keeps
+the distance tile (512 x k) in VMEM and the matmul 128-aligned for d=256.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kmeans_kernel(x_ref, c_ref, lab_ref, dist_ref):
+    x = x_ref[...]                                  # (bn, d)
+    c = c_ref[...]                                  # (k, d)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)      # (bn, 1)
+    c2 = jnp.sum(c * c, axis=1)                     # (k,)
+    xc = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (bn, k)
+    d = jnp.maximum(x2 - 2.0 * xc + c2[None, :], 0.0)
+    lab_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)
+    dist_ref[...] = jnp.min(d, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign_fwd(x, cent, *, block_n=512, interpret=False):
+    n, d = x.shape
+    k = cent.shape[0]
+    block_n = min(block_n, n)
+    if n % block_n:
+        pad = block_n - n % block_n
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    np_ = x.shape[0]
+    grid = (np_ // block_n,)
+    labels, dists = pl.pallas_call(
+        _kmeans_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, cent)
+    return labels[:n], dists[:n]

@@ -1,0 +1,11 @@
+"""jit'd wrapper for the K-Means assignment kernel (no grads needed —
+Lloyd's algorithm is derivative-free)."""
+
+from __future__ import annotations
+
+from repro.kernels.kmeans_assign.kernel import kmeans_assign_fwd
+
+
+def kmeans_assign(x, cent, *, block_n=512, interpret=False):
+    """x (n,d), cent (k,d) -> (labels (n,) int32, min_sq_dist (n,))."""
+    return kmeans_assign_fwd(x, cent, block_n=block_n, interpret=interpret)

@@ -1,0 +1,1 @@
+from repro.kernels.rgcn_spmm.ops import rgcn_message_agg

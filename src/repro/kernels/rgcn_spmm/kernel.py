@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: RGCN message aggregation as MXU one-hot matmuls.
+
+TPU adaptation (DESIGN.md §3): TPUs have no fast random scatter, so the
+gather (h[src]) and the scatter-add (segment-sum over dst) are both cast as
+dense one-hot matmuls against the node axis — MXU work instead of serialized
+memory traffic.  This is the standard trick for graphs whose node count fits
+VMEM (trace HRGs: N <= 2048).
+
+Grid: (B, nE) — edge blocks stream through VMEM; the (N, nb*D) accumulator
+is the kernel OUTPUT block (constant index_map over the edge dim, so Pallas
+keeps it resident in VMEM and revisits it), finalized by the basis
+contraction OUTSIDE the kernel (a plain dense matmul XLA already does well).
+
+BlockSpecs (f32): h (1,N,D) <= 2048x128x4 = 1 MB; edges (1,block_e) int32;
+w (1,block_e,nb); out (1,N,nb*D) <= 2 MB.  block_e = 256 keeps the two
+one-hot matmuls at (256,N)x(N,D) and (N,256)x(256,nb*D) — both 128-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rgcn_kernel(h_ref, src_ref, dst_ref, w_ref, out_ref, *, num_nodes,
+                 block_e, nb):
+    ei = pl.program_id(1)
+
+    @pl.when(ei == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    h = h_ref[0]                       # (N, D)
+    src = src_ref[0]                   # (block_e,)
+    dst = dst_ref[0]
+    w = w_ref[0]                       # (block_e, nb)
+
+    iota_n = jax.lax.broadcasted_iota(jnp.int32, (block_e, num_nodes), 1)
+    onehot_src = (iota_n == src[:, None]).astype(h.dtype)   # (be, N)
+    onehot_dst = (iota_n == dst[:, None]).astype(h.dtype)   # (be, N)
+
+    gathered = jax.lax.dot_general(                         # (be, D) via MXU
+        onehot_src, h, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    D = h.shape[-1]
+    weighted = (gathered[:, None, :] * w[:, :, None]).reshape(block_e, nb * D)
+    scat = jax.lax.dot_general(                             # (N, nb*D) via MXU
+        onehot_dst.T, weighted, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[0] += scat.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_nodes", "block_e", "interpret")
+)
+def rgcn_spmm_fwd(h, src, dst, w, *, num_nodes, block_e=256, interpret=False):
+    """Returns the pre-basis accumulator s: (B, N, nb*D)."""
+    B, E = src.shape
+    _, N, D = h.shape
+    nb = w.shape[-1]
+    block_e = min(block_e, E)
+    if E % block_e != 0:  # pad edges (w=0 rows are no-ops)
+        pad = block_e - E % block_e
+        src = jnp.pad(src, ((0, 0), (0, pad)))
+        dst = jnp.pad(dst, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0)))
+        E = E + pad
+    ne = E // block_e
+
+    kernel = functools.partial(
+        _rgcn_kernel, num_nodes=N, block_e=block_e, nb=nb
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, ne),
+        in_specs=[
+            pl.BlockSpec((1, N, D), lambda b, e: (b, 0, 0)),
+            pl.BlockSpec((1, block_e), lambda b, e: (b, e)),
+            pl.BlockSpec((1, block_e), lambda b, e: (b, e)),
+            pl.BlockSpec((1, block_e, nb), lambda b, e: (b, e, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, N, nb * D), lambda b, e: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N, nb * D), jnp.float32),
+        interpret=interpret,
+    )(h, src, dst, w)

@@ -1,0 +1,41 @@
+"""jit'd wrapper: Pallas forward + oracle-vjp backward (differentiable)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rgcn_spmm.kernel import rgcn_spmm_fwd
+from repro.kernels.rgcn_spmm.ref import rgcn_message_agg_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def rgcn_message_agg(h, basis, src, dst, w, num_nodes: int,
+                     interpret: bool = False):
+    """agg (B,N,O).  w: (B,E,nb) = comb[etype] * edge_mask * norm
+    (relation coefficients folded by the caller; see core/rgcn.py)."""
+    s = rgcn_spmm_fwd(h, src, dst, w, num_nodes=num_nodes, interpret=interpret)
+    B, N, _ = s.shape
+    nb, D, O = basis.shape
+    return jnp.einsum("bnkd,kdo->bno", s.reshape(B, N, nb, D), basis)
+
+
+def _fwd(h, basis, src, dst, w, num_nodes, interpret):
+    out = rgcn_message_agg(h, basis, src, dst, w, num_nodes, interpret)
+    return out, (h, basis, src, dst, w)
+
+
+def _bwd(num_nodes, interpret, res, g):
+    h, basis, src, dst, w = res
+
+    def ref_fn(h_, basis_, w_):
+        return rgcn_message_agg_ref(h_, basis_, src, dst, w_, num_nodes)
+
+    _, vjp = jax.vjp(ref_fn, h, basis, w)
+    dh, dbasis, dw = vjp(g)
+    return dh, dbasis, None, None, dw
+
+
+rgcn_message_agg.defvjp(_fwd, _bwd)

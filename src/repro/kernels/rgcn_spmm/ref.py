@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for RGCN message aggregation.
+
+Computes, for each node v and output dim o:
+    agg[v] = sum_k basis[k] . sum_{e: dst_e = v} w[e,k] * h[src_e]
+where w already folds the relation coefficient, the edge mask and the
+1/|N_r(v)| normalization (see core/rgcn.py).
+
+h: (B,N,D); basis: (nb,D,O); src/dst: (B,E); w: (B,E,nb) -> (B,N,O)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rgcn_message_agg_ref(h, basis, src, dst, w, num_nodes: int):
+    h_src = jnp.take_along_axis(h, src[:, :, None], axis=1)  # (B,E,D)
+    weighted = h_src[:, :, None, :] * w[..., None]           # (B,E,nb,D)
+    s = jax.vmap(
+        lambda m, d: jax.ops.segment_sum(m, d, num_segments=num_nodes)
+    )(weighted, dst)                                         # (B,N,nb,D)
+    return jnp.einsum("bnkd,kdo->bno", s, basis)

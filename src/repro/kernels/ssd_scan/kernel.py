@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: Mamba-2 / SSD intra-chunk compute.
+
+Grid: (B, num_chunks, num_heads) — fully parallel; the O(S/Q) inter-chunk
+recurrence runs OUTSIDE (lax.scan in ops.py) because it is sequential and
+tiny ((nh,hp,ds) carry), while this kernel owns the MXU-heavy quadratic
+per-chunk work:
+
+    CB      = C_chunk @ B_chunk^T                      (Q x ds x Q matmul)
+    w[q,s]  = CB[q,s] * exp(cum[q]-cum[s]) * dt[s]     (causal masked)
+    y_intra = w @ x_chunk                              (Q x Q x hp matmul)
+    state   = (B * exp(cum[-1]-cum) * dt)^T @ x_chunk  (ds x Q x hp matmul)
+
+BlockSpecs (f32): x (1,1,Q,1,hp); cum/dt laid out (B,nc,nh,Q) -> (1,1,1,Q);
+B/C (1,1,Q,ds) shared across the head grid dim.  Q=256, hp=64, ds=128 keeps
+everything 128-lane aligned and the whole working set ~1 MB in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, cum_ref, dt_ref, b_ref, c_ref, y_ref, st_ref, *, Q):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)    # (Q, hp)
+    cum = cum_ref[0, 0, 0, :]                        # (Q,)
+    dt = dt_ref[0, 0, 0, :]                          # (Q,)
+    B = b_ref[0, 0].astype(jnp.float32)              # (Q, ds)
+    C = c_ref[0, 0].astype(jnp.float32)              # (Q, ds)
+
+    CB = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                # (Q, Q)
+    diff = cum[:, None] - cum[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.exp(jnp.where(qi >= si, diff, -1e30))  # mask BEFORE exp
+    w = CB * decay * dt[None, :]
+    y = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                # (Q, hp)
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+
+    sd = jnp.exp(cum[-1] - cum) * dt                 # (Q,)
+    st = jax.lax.dot_general(
+        B * sd[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                # (ds, hp)
+    st_ref[0, 0, 0] = st.T.astype(st_ref.dtype)      # (hp, ds)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(x, cum, dt, Bc, Cc, *, interpret=False):
+    """x (B,nc,Q,nh,hp); cum/dt (B,nc,nh,Q); Bc/Cc (B,nc,Q,ds).
+    Returns (y_intra (B,nc,Q,nh,hp), states (B,nc,nh,hp,ds))."""
+    B, nc, Q, nh, hp = x.shape
+    ds = Bc.shape[-1]
+    kernel = functools.partial(_ssd_kernel, Q=Q)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nc, nh),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, hp), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, c, h: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, c, h: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, Q, ds), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, ds), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, hp), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, hp, ds), lambda b, c, h: (b, c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, nh, hp), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, nh, hp, ds), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, cum, dt, Bc, Cc)

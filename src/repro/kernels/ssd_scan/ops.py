@@ -1,0 +1,72 @@
+"""jit'd wrapper: Pallas intra-chunk kernel + jnp inter-chunk recurrence.
+
+Matches repro.models.ssm.ssd_chunked exactly (same math, same signature);
+backward falls back to the oracle via custom_vjp.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_intra_chunk
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def ssd_scan(x, dt, A, Bc, Cc, chunk: int, interpret: bool = False):
+    """x (B,S,nh,hp); dt (B,S,nh) softplus'ed; A (nh,) negative;
+    Bc/Cc (B,S,ds).  Returns (y (B,S,nh,hp), final_state (B,nh,hp,ds))."""
+    B, S, nh, hp = x.shape
+    ds = Bc.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    a = (dt * A[None, None, :]).astype(jnp.float32)
+    cum = jnp.cumsum(a.reshape(B, nc, Q, nh), axis=2)      # (B,nc,Q,nh)
+    cum_h = cum.transpose(0, 1, 3, 2)                      # (B,nc,nh,Q)
+    dt_h = dt.reshape(B, nc, Q, nh).transpose(0, 1, 3, 2).astype(jnp.float32)
+
+    xr = x.reshape(B, nc, Q, nh, hp)
+    Br = Bc.reshape(B, nc, Q, ds).astype(jnp.float32)
+    Cr = Cc.reshape(B, nc, Q, ds).astype(jnp.float32)
+
+    y_intra, states = ssd_intra_chunk(
+        xr.astype(jnp.float32), cum_h, dt_h, Br, Cr, interpret=interpret
+    )
+
+    # inter-chunk recurrence (sequential, tiny carry)
+    chunk_decay = jnp.exp(cum_h[..., -1])                  # (B,nc,nh)
+
+    def body(carry, xs):
+        dec_c, st_c = xs
+        new = carry * dec_c[..., None, None] + st_c
+        return new, carry
+
+    final, prevs = jax.lax.scan(
+        body, jnp.zeros((B, nh, hp, ds), jnp.float32),
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)),
+    )
+    prevs = prevs.transpose(1, 0, 2, 3, 4)                 # (B,nc,nh,hp,ds)
+
+    dec_in = jnp.exp(cum_h)                                # (B,nc,nh,Q)
+    y_inter = jnp.einsum("bcqn,bchpn,bchq->bcqhp", Cr, prevs, dec_in)
+    y = (y_intra + y_inter).reshape(B, S, nh, hp).astype(x.dtype)
+    return y, final.astype(x.dtype)
+
+
+def _fwd(x, dt, A, Bc, Cc, chunk, interpret):
+    out = ssd_scan(x, dt, A, Bc, Cc, chunk, interpret)
+    return out, (x, dt, A, Bc, Cc)
+
+
+def _bwd(chunk, interpret, res, g):
+    x, dt, A, Bc, Cc = res
+    _, vjp = jax.vjp(lambda *a: ssd_ref(*a, chunk), x, dt, A, Bc, Cc)
+    return vjp(g)
+
+
+ssd_scan.defvjp(_fwd, _bwd)

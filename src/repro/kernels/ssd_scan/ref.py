@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the Mamba-2 SSD chunked scan.
+
+Delegates to the model-layer implementation (repro.models.ssm.ssd_chunked),
+which is itself validated against a sequential recurrence in the tests.
+"""
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, A, Bc, Cc, chunk):
+    return ssd_chunked(x, dt, A, Bc, Cc, chunk)
+
+
+def ssd_sequential_ref(x, dt, A, Bc, Cc):
+    """O(S) sequential recurrence — the ground-truth semantics:
+        state_t = exp(dt_t A) state_{t-1} + dt_t B_t (x) x_t
+        y_t = C_t . state_t
+    x (B,S,nh,hp); dt (B,S,nh); A (nh,); Bc/Cc (B,S,ds)."""
+    import jax
+    import jax.numpy as jnp
+
+    B, S, nh, hp = x.shape
+    ds = Bc.shape[-1]
+
+    def step(state, xs):
+        x_t, dt_t, B_t, C_t = xs
+        decay = jnp.exp(dt_t * A[None])          # (B,nh)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bn,bhp,bh->bhpn", B_t, x_t * dt_t[..., None], jnp.ones_like(dt_t)
+        )
+        y = jnp.einsum("bn,bhpn->bhp", C_t, state)
+        return state, y
+
+    init = jnp.zeros((B, nh, hp, ds), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        Bc.transpose(1, 0, 2).astype(jnp.float32),
+        Cc.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final.astype(x.dtype)

@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape) cell, lower + compile the step on the
+production mesh — 16x16 (data, model) single-pod and 2x16x16
+(pod, data, model) multi-pod — and record memory_analysis / cost_analysis /
+per-device collective bytes into a JSON artifact consumed by the roofline
+analysis (launch/roofline.py) and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out out.json]
+
+Failures here (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the system, not in the cell.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.config import (
+    KIND_DECODE, KIND_PREFILL, KIND_TRAIN, SHAPES, TrainConfig,
+    param_counts, model_flops, shape_applicable,
+)
+from repro.configs import get_arch, list_archs
+from repro.distributed.sharding import set_mesh_rules
+from repro.launch.mesh import make_production_mesh, make_rules
+from repro.launch import steps as steps_mod
+from repro.launch.roofline import collective_bytes_from_hlo, roofline_terms
+from repro.models.specs import batch_specs, decode_state_specs
+
+LARGE_ARCH_PARAMS = 30e9  # bf16 optimizer moments above this (HBM fit)
+
+
+def _train_config(cfg) -> TrainConfig:
+    n = param_counts(cfg)["total"]
+    return TrainConfig(opt_dtype="bfloat16" if n > LARGE_ARCH_PARAMS else "float32")
+
+
+def _lower_one(cfg, shape, mesh, rules, tcfg=None):
+    """Lower + compile a step for `cfg` on `mesh`; returns (compiled, timers)."""
+    t0 = time.time()
+    with mesh, set_mesh_rules(rules):
+        if shape.kind == KIND_TRAIN:
+            tcfg = tcfg or _train_config(cfg)
+            astate = steps_mod.train_state_specs(cfg, tcfg)
+            st_sh = steps_mod.train_state_shardings(cfg, tcfg, astate, rules)
+            b_sh = steps_mod.batch_shardings(cfg, shape, rules)
+            step = steps_mod.make_train_step(cfg, tcfg)
+            lowered = jax.jit(
+                step, in_shardings=(st_sh, b_sh),
+                out_shardings=(st_sh, None), donate_argnums=(0,),
+            ).lower(astate, batch_specs(cfg, shape))
+        elif shape.kind == KIND_PREFILL:
+            aparams = steps_mod.abstract_params(cfg)
+            p_sh = steps_mod.param_shardings(cfg, aparams, rules)
+            b_sh = steps_mod.batch_shardings(cfg, shape, rules)
+            step = steps_mod.make_prefill_step(cfg)
+            lowered = jax.jit(step, in_shardings=(p_sh, b_sh)).lower(
+                aparams, batch_specs(cfg, shape)
+            )
+        else:  # decode
+            aparams = steps_mod.abstract_params(cfg)
+            p_sh = steps_mod.param_shardings(cfg, aparams, rules)
+            d_sh = steps_mod.decode_state_shardings(cfg, shape, rules)
+            b_sh = steps_mod.batch_shardings(cfg, shape, rules)
+            step = steps_mod.make_decode_step(cfg)
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, d_sh, b_sh),
+                out_shardings=(None, d_sh), donate_argnums=(1,),
+            ).lower(aparams, decode_state_specs(cfg, shape),
+                    batch_specs(cfg, shape))
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, (round(t_lower, 1), round(t_compile, 1))
+
+
+def _costs(compiled):
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {
+        "flops": cost.get("flops") or 0.0,
+        "bytes": cost.get("bytes accessed") or 0.0,
+        "coll": coll["per_device_bytes"],
+        "coll_detail": coll,
+    }
+
+
+def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+               rules_kw=None, cfg_kw=None, correct_scan: bool = True,
+               verbose=True):
+    """Lower + compile one cell; returns the result record.
+
+    XLA's cost_analysis counts a lax.scan body ONCE regardless of trip
+    count, so per-step FLOP/byte/collective totals from the scanned-layers
+    compile are underestimates.  With correct_scan=True we additionally
+    lower UNROLLED 1-block and 2-block variants of the same arch and
+    extrapolate: total = cost(1b) + (num_blocks - 1) * (cost(2b) - cost(1b)).
+    memory_analysis comes from the full scanned compile (that's the real
+    executable's footprint)."""
+    cfg = get_arch(arch_id)
+    if cfg_kw:
+        cfg = cfg.replace(**cfg_kw)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name,
+                "multi_pod": multi_pod, "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, multi_pod=multi_pod, **(rules_kw or {}))
+    tcfg = _train_config(cfg)
+    compiled, (t_lower, t_compile) = _lower_one(cfg, shape, mesh, rules, tcfg)
+
+    mem = compiled.memory_analysis()
+    base = _costs(compiled)
+    n_dev = mesh.devices.size
+
+    corrected = dict(base)
+    if correct_scan and cfg.num_blocks > 1:
+        # the correction lowers must contain NO inner scans either (chunked
+        # attention / chunked CE / seq-chunked MoE are all lax.scans that
+        # cost_analysis counts once) — chunking exists only to bound runtime
+        # memory, and lowering allocates nothing, so disable it here.
+        unchunk = dict(
+            scan_layers=False,
+            attn_chunk_threshold=10**9,
+            loss_chunk=10**9,
+            moe_seq_chunk=10**9,
+        )
+        c1 = cfg.replace(num_layers=cfg.block_size, **unchunk)
+        c2 = cfg.replace(num_layers=2 * cfg.block_size, **unchunk)
+        k1, _ = _lower_one(c1, shape, mesh, rules, tcfg)
+        k2, _ = _lower_one(c2, shape, mesh, rules, tcfg)
+        s1, s2 = _costs(k1), _costs(k2)
+        nb = cfg.num_blocks
+        corrected = {
+            k: s1[k] + (nb - 1) * (s2[k] - s1[k])
+            for k in ("flops", "bytes", "coll")
+        }
+
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "num_devices": int(n_dev),
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "memory": {
+            "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost_scanned": {k: base[k] for k in ("flops", "bytes", "coll")},
+        "cost": {
+            "flops_per_device": corrected["flops"],
+            "bytes_per_device": corrected["bytes"],
+        },
+        "collectives": {"per_device_bytes": corrected["coll"],
+                        **{k: v for k, v in base["coll_detail"].items()
+                           if k != "per_device_bytes"}},
+        "model_flops": model_flops(cfg, shape),
+        "params_total": param_counts(cfg)["total"],
+        "params_active": param_counts(cfg)["active"],
+    }
+    rec["roofline"] = roofline_terms(rec)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    # resume from existing artifact (incremental)
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+        done = {(r["arch"], r["shape"], r["multi_pod"]) for r in results
+                if r.get("status") in ("ok", "skipped")}
+
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                key = (arch, shape, mp)
+                if key in done:
+                    continue
+                label = f"{arch} x {shape} ({'2x16x16' if mp else '16x16'})"
+                print(f"[dryrun] {label} ...", flush=True)
+                try:
+                    # scan-correction (for the roofline table) on the
+                    # single-pod mesh only; multi-pod proves the pod axis.
+                    rec = lower_cell(arch, shape, multi_pod=mp,
+                                     correct_scan=not mp)
+                except Exception as e:  # a bug in the system — record it
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                results.append(rec)
+                status = rec["status"]
+                if status == "ok":
+                    m = rec["memory"]
+                    print(
+                        f"  ok: {rec['compile_s']}s compile, "
+                        f"args {_gb(m['argument_bytes_per_device'])}, "
+                        f"temp {_gb(m['temp_bytes_per_device'])}, "
+                        f"flops/dev {rec['cost']['flops_per_device']:.3g}, "
+                        f"coll/dev {_gb(rec['collectives']['per_device_bytes'])}",
+                        flush=True,
+                    )
+                else:
+                    print(f"  {status}: {rec.get('reason', rec.get('error'))}",
+                          flush=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+def _gb(x):
+    return f"{x / 1e9:.2f}GB" if x is not None else "?"
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

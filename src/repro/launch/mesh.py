@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run driver must set XLA_FLAGS before any jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.config import MeshConfig
+from repro.distributed.sharding import MeshRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_rules(mesh, *, multi_pod: bool = False, **kw) -> MeshRules:
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    return MeshRules(mesh=mesh, batch_axes=batch_axes, **kw)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Single-host debug mesh (uses however many devices exist)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,127 @@
+"""Roofline analysis (deliverable g).
+
+Three terms per (arch x shape x mesh), from the dry-run's compiled artifact:
+
+  compute    = HLO_FLOPs   / (chips * peak_FLOP/s)       [197 TFLOP/s bf16]
+  memory     = HLO_bytes   / (chips * HBM_bw)            [819 GB/s]
+  collective = coll_bytes  / (chips * link_bw)           [~50 GB/s/link]
+
+cost_analysis() reports per-device FLOPs/bytes on the SPMD-partitioned
+module, so HLO_FLOPs = flops_per_device * chips and the chips cancel;
+collective bytes are parsed from the partitioned HLO text (per-device) and
+scaled the same way.  The dominant term is the bottleneck the perf loop
+(EXPERIMENTS.md §Perf) iterates on.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip (TPU v5e)
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s+(?:\([^)]*\)\s+)?((?:[a-z0-9]+)\[[0-9,]*\][^ ]*)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective op in the partitioned
+    HLO.  Returns per-category and total per-device bytes."""
+    per_cat: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if shape_str is None:
+            # tuple-result form: take shapes before the op name
+            pre = line.split(kind)[0]
+            shape_str = pre
+        b = _shape_bytes(shape_str)
+        per_cat[kind] = per_cat.get(kind, 0) + b
+        count[kind] = count.get(kind, 0) + 1
+    total = sum(per_cat.values())
+    return {
+        "per_device_bytes": total,
+        "by_kind_bytes": per_cat,
+        "op_counts": count,
+    }
+
+
+def roofline_terms(rec: dict) -> dict:
+    """Compute the three terms (seconds) + bottleneck for a dry-run record."""
+    chips = rec["num_devices"]
+    fpd = rec["cost"].get("flops_per_device") or 0.0
+    bpd = rec["cost"].get("bytes_per_device") or 0.0
+    cpd = rec["collectives"]["per_device_bytes"]
+    t_compute = fpd / PEAK_FLOPS
+    t_memory = bpd / HBM_BW
+    t_coll = cpd / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    total_flops = fpd * chips
+    useful = rec.get("model_flops", 0.0)
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "hlo_flops_total": total_flops,
+        "model_flops": useful,
+        "useful_flop_ratio": (useful / total_flops) if total_flops else None,
+        "step_time_bound_s": max(terms.values()),
+        "roofline_fraction": (
+            min(1.0, t_compute / max(terms.values())) if max(terms.values()) else None
+        ),
+    }
+
+
+def summarize(path: str = "dryrun_results.json"):
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for r in results:
+        if r.get("status") != "ok":
+            rows.append((r["arch"], r["shape"], r["multi_pod"],
+                         r["status"], r.get("reason", r.get("error", ""))[:60]))
+            continue
+        rl = r["roofline"]
+        rows.append((
+            r["arch"], r["shape"], r["multi_pod"], "ok",
+            f"comp {rl['compute_s']:.3e}s mem {rl['memory_s']:.3e}s "
+            f"coll {rl['collective_s']:.3e}s -> {rl['dominant']}"
+            f" (useful {100 * (rl['useful_flop_ratio'] or 0):.0f}%)",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    for row in summarize(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"):
+        print(*row)

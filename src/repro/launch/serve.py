@@ -1,0 +1,113 @@
+"""Serving launcher: batched prefill + decode loop.
+
+``python -m repro.launch.serve --arch mamba2-780m --smoke --tokens 32``
+
+Runs continuous batching over a synthetic request queue: prefill each batch,
+then decode N tokens per request with the KV/SSM cache, reporting per-phase
+throughput.  Full configs are exercised by the dry-run decode cells.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, smoke_arch
+from repro.distributed.sharding import MeshRules, set_mesh_rules
+from repro.launch.mesh import make_debug_mesh
+from repro.models import transformer as tf
+from repro.models.frontends import text_len
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=2, help="number of batches")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_arch(args.arch) if args.smoke else get_arch(args.arch)
+    mesh = make_debug_mesh()
+    rules = MeshRules(mesh=mesh, batch_axes=("data",))
+
+    params, _ = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
+    max_seq = args.prompt_len + args.tokens + cfg.frontend_tokens
+
+    prefill_fn = jax.jit(lambda p, t, f: tf.prefill(cfg, p, t, f))
+    decode_fn = jax.jit(lambda p, s, t: tf.decode_step(cfg, p, s, t))
+
+    rng = np.random.default_rng(args.seed)
+    tl = text_len(cfg, args.prompt_len + cfg.frontend_tokens)
+
+    with mesh, set_mesh_rules(rules):
+        for req in range(args.requests):
+            prompts = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (args.batch, tl)), jnp.int32
+            )
+            fe = None
+            if cfg.frontend == "vision":
+                fe = jnp.asarray(
+                    rng.standard_normal((args.batch, cfg.frontend_tokens, cfg.d_model)),
+                    jnp.float32,
+                )
+            elif cfg.frontend == "audio":
+                fe = jnp.asarray(
+                    rng.standard_normal((args.batch, tl, cfg.d_model)), jnp.float32
+                )
+            t0 = time.time()
+            logits, caches, idx = prefill_fn(params, prompts, fe)
+            jax.block_until_ready(logits)
+            t_prefill = time.time() - t0
+
+            # build the decode state at max_seq and splice prefilled caches in
+            state = tf.init_decode_state(cfg, args.batch, max_seq,
+                                         prefilled=int(idx))
+            state = _splice_prefill(cfg, state, caches, int(idx))
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            out_tokens = [tok]
+            t0 = time.time()
+            for _ in range(args.tokens - 1):
+                logits, state = decode_fn(params, state, tok)
+                tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+                out_tokens.append(tok)
+            jax.block_until_ready(tok)
+            t_decode = time.time() - t0
+            seq = jnp.concatenate(out_tokens, axis=1)
+            print(
+                f"[serve] batch {req}: prefill {tl} toks x{args.batch} in "
+                f"{t_prefill * 1e3:.0f}ms; decode {args.tokens} toks in "
+                f"{t_decode * 1e3:.0f}ms "
+                f"({args.tokens * args.batch / max(t_decode, 1e-9):.1f} tok/s); "
+                f"sample: {np.asarray(seq[0, :8]).tolist()}",
+                flush=True,
+            )
+    return 0
+
+
+def _splice_prefill(cfg, state, caches, prefilled: int):
+    """Write prefill KV (length P) into the max_seq decode caches; SSM/conv
+    states transfer directly."""
+    import jax
+
+    def splice(dst, src):
+        if dst.shape == src.shape:  # ssm / conv states
+            return src
+        # KV: dst (nb,B,S_max,K,hd), src (nb,B,P,K,hd)
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), 0, axis=2
+        )
+
+    new_caches = jax.tree_util.tree_map(splice, state["caches"], caches)
+    return {"caches": new_caches, "index": jnp.int32(prefilled)}
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

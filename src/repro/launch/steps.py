@@ -1,0 +1,138 @@
+"""Step functions the launchers and the dry-run lower: train / prefill /
+decode, plus the sharding trees that accompany them."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (
+    KIND_DECODE, KIND_PREFILL, KIND_TRAIN, ModelConfig, ShapeConfig,
+    TrainConfig,
+)
+from repro.distributed.sharding import MeshRules, sharding_for, spec_for
+from repro.models import transformer as tf
+from repro.models.specs import batch_axes_tree, batch_specs, decode_state_specs
+from repro.optim import TrainState, adamw_init, apply_gradients
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    def train_step(state: TrainState, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            grads, metrics = _accumulated_grads(cfg, state.params, batch, tcfg)
+        else:
+            (loss, aux), grads = jax.value_and_grad(
+                lambda p: tf.lm_loss(cfg, p, batch), has_aux=True
+            )(state.params)
+            metrics = dict(aux, loss=loss)
+        new_state, opt_metrics = apply_gradients(state, grads, tcfg)
+        return new_state, dict(metrics, **opt_metrics)
+
+    return train_step
+
+
+def _accumulated_grads(cfg, params, batch, tcfg):
+    """Gradient accumulation over microbatches (scan over batch splits)."""
+    n = tcfg.microbatch
+
+    def split(x):
+        B = x.shape[0]
+        return x.reshape(n, B // n, *x.shape[1:])
+
+    micro = jax.tree_util.tree_map(split, batch)
+
+    def body(carry, mb):
+        acc, loss_acc = carry
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: tf.lm_loss(cfg, p, mb), has_aux=True
+        )(params)
+        acc = jax.tree_util.tree_map(jnp.add, acc, grads)
+        return (acc, loss_acc + loss), None
+
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (grads, loss), _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)), micro)
+    grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+    return grads, {"loss": loss / n}
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, caches, idx = tf.prefill(
+            cfg, params, batch["tokens"], batch.get("frontend")
+        )
+        return logits, {"caches": caches, "index": idx}
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, state, batch):
+        return tf.decode_step(cfg, params, state, batch["tokens"])
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+
+def _tree_shardings(axes_tree, spec_tree, rules: MeshRules, is_param: bool):
+    def is_axes_leaf(t):
+        return isinstance(t, tuple) and all(
+            isinstance(x, (str, type(None))) for x in t
+        )
+
+    return jax.tree_util.tree_map(
+        lambda axes, leaf: sharding_for(axes, leaf.shape, rules=rules,
+                                        is_param=is_param),
+        axes_tree, spec_tree, is_leaf=is_axes_leaf,
+    )
+
+
+def abstract_params(cfg: ModelConfig):
+    specs = jax.eval_shape(lambda k: tf.init_params(cfg, k)[0],
+                           jax.random.PRNGKey(0))
+    return specs
+
+
+def param_shardings(cfg: ModelConfig, aparams, rules: MeshRules):
+    return _tree_shardings(tf.params_axes(cfg), aparams, rules, True)
+
+
+def train_state_specs(cfg: ModelConfig, tcfg: TrainConfig):
+    aparams = abstract_params(cfg)
+    return jax.eval_shape(lambda p: adamw_init(p, tcfg), aparams)
+
+
+def train_state_shardings(cfg: ModelConfig, tcfg: TrainConfig,
+                          astate: TrainState, rules: MeshRules):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    psh = param_shardings(cfg, astate.params, rules)
+    rep = NamedSharding(rules.mesh, P())
+    err = None if astate.compress_err is None else psh
+    return TrainState(step=rep, params=psh, mu=psh, nu=psh, compress_err=err)
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules):
+    return _tree_shardings(
+        batch_axes_tree(cfg, shape), batch_specs(cfg, shape), rules, False
+    )
+
+
+def decode_state_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                           rules: MeshRules):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axes = tf.decode_state_axes(cfg)
+    specs = decode_state_specs(cfg, shape)
+    caches = _tree_shardings(axes["caches"], specs["caches"], rules, False)
+    return {"caches": caches, "index": NamedSharding(rules.mesh, P())}

@@ -1,0 +1,136 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Production loop wiring: deterministic data pipeline, sharded train step
+under an explicit mesh, async atomic checkpointing with ``--resume auto``
+(elastic across mesh changes), straggler watchdog, heartbeat, optional
+int8 error-feedback gradient compression and gradient accumulation.
+
+On this CPU container use ``--smoke`` (reduced same-family config); full
+configs are exercised via the dry-run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.config import SHAPES, ShapeConfig, TrainConfig
+from repro.configs import get_arch, smoke_arch
+from repro.checkpoint import CheckpointManager
+from repro.data import TokenStream
+from repro.distributed.fault import Heartbeat, Watchdog
+from repro.distributed.sharding import MeshRules, set_mesh_rules
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_debug_mesh, make_production_mesh, make_rules
+from repro.models import transformer as tf
+from repro.optim import adamw_init
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--mesh", choices=["debug", "pod", "multipod"],
+                    default="debug")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--resume", default=None, help="'auto' or a step number")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_arch(args.arch) if args.smoke else get_arch(args.arch)
+    tcfg = TrainConfig(
+        learning_rate=args.lr, warmup_steps=args.warmup,
+        total_steps=args.steps, microbatch=args.microbatch,
+        grad_compress=args.grad_compress, seed=args.seed,
+    )
+
+    if args.mesh == "debug":
+        mesh = make_debug_mesh()
+        rules = MeshRules(mesh=mesh, batch_axes=("data",))
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+        rules = make_rules(mesh, multi_pod=args.mesh == "multipod")
+
+    shape = ShapeConfig("cli", args.seq_len, args.batch, "train")
+    data = TokenStream(
+        cfg.vocab_size, args.seq_len, args.batch, seed=args.seed,
+        frontend=cfg.frontend, d_model=cfg.d_model,
+        frontend_tokens=cfg.frontend_tokens,
+    )
+
+    ckpt = CheckpointManager(args.checkpoint_dir) if args.checkpoint_dir else None
+    watchdog = Watchdog(
+        on_straggler=lambda t: print(f"[watchdog] step exceeded {t:.1f}s SLO "
+                                     f"(straggler suspected)", flush=True)
+    )
+    hb = Heartbeat(f"/tmp/repro_heartbeat_{args.seed}.json")
+    hb.start()
+
+    with mesh, set_mesh_rules(rules):
+        astate = steps_mod.train_state_specs(cfg, tcfg)
+        st_sh = steps_mod.train_state_shardings(cfg, tcfg, astate, rules)
+        start_step = 0
+        if ckpt and args.resume:
+            step_arg = None if args.resume == "auto" else int(args.resume)
+            try:
+                state, start_step = ckpt.restore(astate, step=step_arg,
+                                                 shardings=st_sh)
+                data.skip(start_step)
+                print(f"[train] resumed from step {start_step}", flush=True)
+            except FileNotFoundError:
+                state = None
+        else:
+            state = None
+        if state is None:
+            params, _ = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
+            state = adamw_init(params, tcfg)
+            state = jax.device_put(state, st_sh)
+
+        step_fn = jax.jit(
+            steps_mod.make_train_step(cfg, tcfg),
+            in_shardings=(st_sh, None), out_shardings=(st_sh, None),
+            donate_argnums=(0,),
+        )
+
+        t_start = time.time()
+        for step in range(start_step, args.steps):
+            batch = {k: jax.numpy.asarray(v) for k, v in data.next().items()}
+            watchdog.step_start()
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = watchdog.step_end()
+            hb.update(step)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                print(
+                    f"[train] step {step:5d} loss={m['loss']:.4f} "
+                    f"gnorm={m.get('grad_norm', 0):.2f} lr={m.get('lr', 0):.2e} "
+                    f"{dt * 1e3:.0f}ms", flush=True,
+                )
+            if ckpt and (step + 1) % args.checkpoint_every == 0:
+                ckpt.save(step + 1, state, specs=st_sh)
+        if ckpt:
+            ckpt.save(args.steps, state, specs=st_sh)
+            ckpt.wait()
+    hb.stop()
+    total = time.time() - t_start
+    print(f"[train] done: {args.steps - start_step} steps in {total:.1f}s "
+          f"({watchdog.fired} watchdog events)", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,8 @@
+from repro.models.transformer import (
+    init_params,
+    forward,
+    prefill,
+    decode_step,
+    init_decode_state,
+    lm_loss,
+)

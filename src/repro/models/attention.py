@@ -1,0 +1,203 @@
+"""GQA attention: full / chunked-causal (flash-style online softmax in jnp)
+train-prefill paths and a KV-cache decode path.
+
+The Pallas flash kernel (repro.kernels.flash_attention) is dispatched via
+``cfg.attn_impl``; the jnp paths here are the XLA production fallback and the
+oracle the kernel is tested against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import _dense_init, apply_rope, cast, rope_angles
+
+
+def attention_axes(cfg: ModelConfig):
+    axes = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        axes["bq"] = ("heads", "head_dim")
+        axes["bk"] = ("kv_heads", "head_dim")
+        axes["bv"] = ("kv_heads", "head_dim")
+    return axes
+
+
+def init_attention(key, cfg: ModelConfig):
+    D, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "wq": _dense_init(k1, (D, H, hd)),
+        "wk": _dense_init(k2, (D, K, hd)),
+        "wv": _dense_init(k3, (D, K, hd)),
+        "wo": _dense_init(k4, (H, hd, D), scale=1.0 / np.sqrt(H * hd) / np.sqrt(2 * cfg.num_layers)),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((H, hd), jnp.float32)
+        params["bk"] = jnp.zeros((K, hd), jnp.float32)
+        params["bv"] = jnp.zeros((K, hd), jnp.float32)
+    return params, attention_axes(cfg)
+
+
+def _project_qkv(cfg: ModelConfig, p, h, positions):
+    dt = jnp.dtype(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dhk->bshk", h, cast(p["wq"], dt))
+    k = jnp.einsum("bsd,dhk->bshk", h, cast(p["wk"], dt))
+    v = jnp.einsum("bsd,dhk->bshk", h, cast(p["wv"], dt))
+    if cfg.qkv_bias:
+        q = q + cast(p["bq"], dt)
+        k = k + cast(p["bk"], dt)
+        v = v + cast(p["bv"], dt)
+    cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _full_causal_attention(q, k, v, scale):
+    """q (B,S,K,G,hd); k,v (B,S,K,hd).  Materializes (B,K,G,S,S)."""
+    S = q.shape[1]
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k) * scale
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(mask, scores.astype(jnp.float32), -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+
+
+def _chunked_causal_attention(q, k, v, scale, chunk_q, chunk_k):
+    """Flash-style online softmax in jnp: O(S*chunk) memory, full S^2 FLOPs
+    (masked); the Pallas kernel additionally skips fully-masked KV blocks."""
+    B, S, K, G, hd = q.shape
+    Cq = min(chunk_q, S)
+    Ck = min(chunk_k, S)
+    nq, nk = S // Cq, S // Ck
+    assert nq * Cq == S and nk * Ck == S, (S, Cq, Ck)
+
+    qs = q.reshape(B, nq, Cq, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(B, nk, Ck, K, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, Ck, K, hd).transpose(1, 0, 2, 3, 4)
+    q_pos = (jnp.arange(nq)[:, None] * Cq + jnp.arange(Cq)[None, :])  # (nq,Cq)
+    k_pos = (jnp.arange(nk)[:, None] * Ck + jnp.arange(Ck)[None, :])  # (nk,Ck)
+
+    def q_body(_, xs):
+        q_c, qp = xs  # (B,Cq,K,G,hd), (Cq,)
+
+        def kv_body(carry, kxs):
+            m, l, acc = carry
+            k_c, v_c, kp = kxs
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_c, k_c).astype(jnp.float32) * scale
+            causal = qp[:, None] >= kp[None, :]  # (Cq,Ck)
+            s = jnp.where(causal[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(q_c.dtype), v_c)
+            acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, Cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, K, G, Cq), jnp.float32)
+        a0 = jnp.zeros((B, K, G, Cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (ks, vs, k_pos))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q_c.dtype)  # (B,Cq,K,G,hd)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, q_pos))  # (nq,B,Cq,K,G,hd)
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, K, G, hd)
+
+
+def attention_forward(cfg: ModelConfig, p, h, positions):
+    """Train / prefill attention.  Returns (out (B,S,D), (k, v)) — the final
+    K/V (for prefill cache construction)."""
+    B, S, D = h.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    q, k, v = _project_qkv(cfg, p, h, positions)
+    qg = q.reshape(B, S, K, G, hd)
+    scale = 1.0 / np.sqrt(hd)
+    if cfg.attn_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        ctx = flash_attention(
+            qg, k, v, scale=scale,
+            interpret=(cfg.attn_impl == "pallas_interpret"),
+        )
+    elif S >= cfg.attn_chunk_threshold:
+        ctx = _chunked_causal_attention(qg, k, v, scale, cfg.attn_chunk, cfg.attn_chunk)
+    else:
+        ctx = _full_causal_attention(qg, k, v, scale)
+    ctx = constrain(ctx.reshape(B, S, H, hd), "batch", "seq", "heads", "head_dim")
+    dt = jnp.dtype(cfg.compute_dtype)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, cast(p["wo"], dt))
+    return constrain(out, "batch", "seq", "embed"), (k, v)
+
+
+def decode_attention_forward(cfg: ModelConfig, p, h, cache, cache_index):
+    """One-token decode.  h (B,1,D); cache {'k','v'} (B,S_max,K,hd) with the
+    seq dim sharded over 'model' (cache_seq) when kv_heads < |model|."""
+    B, _, D = h.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    positions = jnp.full((B, 1), cache_index, jnp.int32)
+    q, k_new, v_new = _project_qkv(cfg, p, h, positions)
+
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), cache_index, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), cache_index, axis=1)
+    k_cache = constrain(k_cache, "batch", "cache_seq", "kv_heads", "head_dim")
+    v_cache = constrain(v_cache, "batch", "cache_seq", "kv_heads", "head_dim")
+
+    qg = q.reshape(B, K, G, hd)
+    scale = 1.0 / np.sqrt(hd)
+    S_max = k_cache.shape[1]
+    if cfg.decode_split and S_max % cfg.decode_split == 0:
+        # flash-decoding split softmax: per-chunk (m, l, acc) partials stay
+        # on the shard that owns the KV chunk; only the (B,K,G,nc[,hd])
+        # partials cross the mesh for the log-sum-exp merge — versus
+        # all-gathering the whole (B,S,K,hd) cache (EXPERIMENTS.md §Perf).
+        nc = cfg.decode_split
+        Sc = S_max // nc
+        kc = k_cache.reshape(B, nc, Sc, K, hd)
+        vc = v_cache.reshape(B, nc, Sc, K, hd)
+        kc = constrain(kc, "batch", "cache_seq", None, "kv_heads", "head_dim")
+        vc = constrain(vc, "batch", "cache_seq", None, "kv_heads", "head_dim")
+        s = jnp.einsum("bkgh,bcskh->bkgcs", qg, kc).astype(jnp.float32) * scale
+        pos = (jnp.arange(nc)[:, None] * Sc + jnp.arange(Sc)[None, :])
+        valid = pos[None, None, None] <= cache_index
+        s = jnp.where(valid, s, -1e30)
+        m_c = jnp.max(s, axis=-1)                       # (B,K,G,nc)
+        pr = jnp.exp(s - m_c[..., None])
+        l_c = jnp.sum(pr, axis=-1)                      # (B,K,G,nc)
+        acc_c = jnp.einsum("bkgcs,bcskh->bkgch", pr.astype(qg.dtype), vc)
+        acc_c = constrain(acc_c, "batch", "kv_heads", None, "cache_seq", "head_dim")
+        # merge partials (tiny, crosses the model axis)
+        m = jnp.max(m_c, axis=-1, keepdims=True)        # (B,K,G,1)
+        w = jnp.exp(m_c - m)                            # (B,K,G,nc)
+        l = jnp.sum(l_c * w, axis=-1)
+        ctx = jnp.einsum("bkgch,bkgc->bkgh",
+                         acc_c.astype(jnp.float32), w) / jnp.maximum(
+            l, 1e-20)[..., None]
+        ctx = ctx.astype(qg.dtype)
+    else:
+        s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32) * scale
+        valid = jnp.arange(S_max)[None, None, None, :] <= cache_index
+        s = jnp.where(valid, s, -jnp.inf)
+        probs = jax.nn.softmax(s, axis=-1).astype(qg.dtype)
+        ctx = jnp.einsum("bkgs,bskh->bkgh", probs, v_cache)
+    dt = jnp.dtype(cfg.compute_dtype)
+    out = jnp.einsum("bhk,hkd->bd", ctx.reshape(B, H, hd), cast(p["wo"], dt))
+    return out[:, None, :], {"k": k_cache, "v": v_cache}

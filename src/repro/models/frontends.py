@@ -1,0 +1,34 @@
+"""Modality frontends for [audio]/[vlm] archs — STUBS per assignment.
+
+``input_specs()`` provides *precomputed* frame/patch embeddings; the traced,
+simulated, and dry-run subject is the transformer backbone.
+
+- audio (musicgen): EnCodec frame-conditioning embeddings (B, S, D), added to
+  the token embeddings.
+- vision (paligemma): SigLIP patch embeddings (B, frontend_tokens, D),
+  prepended prefix-LM style.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def apply_frontend(cfg: ModelConfig, h_tokens, frontend):
+    if cfg.frontend is None or frontend is None:
+        return h_tokens
+    frontend = frontend.astype(h_tokens.dtype)
+    if cfg.frontend == "audio":
+        return h_tokens + frontend
+    if cfg.frontend == "vision":
+        return jnp.concatenate([frontend, h_tokens], axis=1)
+    raise ValueError(f"unknown frontend {cfg.frontend!r}")
+
+
+def text_len(cfg: ModelConfig, total_seq: int) -> int:
+    """Text-token portion of a total sequence length."""
+    if cfg.frontend == "vision":
+        return total_seq - cfg.frontend_tokens
+    return total_seq

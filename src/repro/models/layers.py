@@ -1,0 +1,178 @@
+"""Shared layers: norms, RoPE, SwiGLU MLP, embeddings, chunked cross-entropy.
+
+All layers are functional: ``init_*`` returns ``(params, axes)`` where `axes`
+mirrors `params` with logical dim-name tuples (consumed by the sharding
+engine); ``*_forward`` are pure functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import constrain
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+def cast(x, dtype_str):
+    return x.astype(jnp.dtype(dtype_str))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": ("embed",)}
+
+
+def rmsnorm(p, x, eps):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(dtype)
+
+
+def rmsnorm_gated(scale, x, z, eps):
+    """Mamba-2 gated norm: RMSNorm(x * silu(z)) * scale."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions, head_dim, theta):
+    """positions (...,S) -> cos/sin (...,S, head_dim//2), fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (B,S,H,hd); cos/sin (B,S,half) or (S,half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half)
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    dtype = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = x1f * cos - x2f * sin
+    r2 = x2f * cos + x1f * sin
+    return jnp.concatenate([r1, r2], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense (SwiGLU) MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_axes(cfg: ModelConfig):
+    return {"w1": ("embed", "ffn"), "w3": ("embed", "ffn"), "w2": ("ffn", "embed")}
+
+
+def init_mlp(key, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w1": _dense_init(k1, (D, F)),
+        "w3": _dense_init(k2, (D, F)),
+        "w2": _dense_init(k3, (F, D), scale=1.0 / np.sqrt(F) / np.sqrt(2 * cfg.num_layers)),
+    }
+    return params, mlp_axes(cfg)
+
+
+def mlp_forward(cfg: ModelConfig, p, h):
+    dt = jnp.dtype(cfg.compute_dtype)
+    w1, w3, w2 = cast(p["w1"], dt), cast(p["w3"], dt), cast(p["w2"], dt)
+    a = jnp.einsum("bsd,df->bsf", h, w1)
+    g = jnp.einsum("bsd,df->bsf", h, w3)
+    a = constrain(a, "batch", "seq", "ffn")
+    z = jax.nn.silu(a) * g
+    out = jnp.einsum("bsf,fd->bsd", z, w2)
+    return constrain(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding + chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def embedding_axes(cfg: ModelConfig):
+    axes = {"tokens": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed", "vocab")
+    return axes
+
+
+def init_embedding(key, cfg: ModelConfig):
+    V, D = cfg.vocab_size, cfg.d_model
+    k1, k2 = jax.random.split(key)
+    params = {"tokens": _dense_init(k1, (V, D), scale=0.02)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(k2, (D, V))
+    return params, embedding_axes(cfg)
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens):
+    table = cast(p["tokens"], cfg.compute_dtype)
+    h = jnp.take(table, tokens, axis=0)
+    return constrain(h, "batch", "seq", "embed")
+
+
+def lm_head_weight(cfg: ModelConfig, embed_params):
+    if cfg.tie_embeddings:
+        return cast(embed_params["tokens"].T, cfg.compute_dtype)  # (D, V)
+    return cast(embed_params["lm_head"], cfg.compute_dtype)
+
+
+def chunked_cross_entropy(cfg: ModelConfig, h, w_head, labels):
+    """Mean CE over labels >= 0; logits materialized loss_chunk tokens at a
+    time along seq (bounds the (B, chunk, V) transient for 257k vocabs)."""
+    B, S, D = h.shape
+    C = min(cfg.loss_chunk, S)
+    n_chunks = S // C
+    rem = S - n_chunks * C
+
+    def chunk_loss(h_c, y_c):
+        logits = jnp.einsum("bsd,dv->bsv", h_c, w_head)
+        logits = constrain(logits, "batch", "seq", "vocab").astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(y_c, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = (y_c >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * valid), jnp.sum(valid)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h_c, y_c = xs
+        l, n = chunk_loss(h_c, y_c)
+        return (tot + l, cnt + n), None
+
+    hs = h[:, : n_chunks * C].reshape(B, n_chunks, C, D).swapaxes(0, 1)
+    ys = labels[:, : n_chunks * C].reshape(B, n_chunks, C).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), (hs, ys))
+    if rem:
+        l, n = chunk_loss(h[:, n_chunks * C :], labels[:, n_chunks * C :])
+        tot, cnt = tot + l, cnt + n
+    return tot / jnp.maximum(cnt, 1.0)

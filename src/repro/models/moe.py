@@ -1,0 +1,135 @@
+"""Top-k MoE with group-local (per-batch-row) routing and capacity gather.
+
+TPU-native adaptation (DESIGN.md §3): no token-permute scatter across devices.
+Each batch row is a routing group — routing, position-in-expert cumsum,
+gather into (E, C) buffers and the combine scatter are all *local to the
+batch dim*, which is sharded over the data axes; GSPMD never sees a
+cross-shard cumsum.  Expert FFN weights are sharded over the model axis on
+d_ff (TP-MoE, Megatron-style: one all-reduce after w2) — expert-parallel
+(experts over 'model') is a recorded perf-iteration alternative.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import _dense_init, cast
+
+
+def moe_axes(cfg: ModelConfig):
+    return {
+        "router": ("embed", "experts"),
+        "w1": ("experts", "embed", "ffn"),
+        "w3": ("experts", "embed", "ffn"),
+        "w2": ("experts", "ffn", "embed"),
+    }
+
+
+def init_moe(key, cfg: ModelConfig):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "router": _dense_init(k1, (D, E), scale=0.02),
+        "w1": _dense_init(k2, (E, D, F)),
+        "w3": _dense_init(k3, (E, D, F)),
+        "w2": _dense_init(k4, (E, F, D), scale=1.0 / np.sqrt(F) / np.sqrt(2 * cfg.num_layers)),
+    }
+    return params, moe_axes(cfg)
+
+
+def capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    c = int(np.ceil(cfg.top_k * group_tokens * cfg.capacity_factor / cfg.num_experts))
+    c = max(c, cfg.top_k)
+    return int(np.ceil(c / 4) * 4) if c > 4 else c
+
+
+def moe_forward(cfg: ModelConfig, p, h):
+    """h (B,S,D) -> (out (B,S,D), aux_loss scalar).
+
+    Long sequences are routed in seq chunks of cfg.moe_seq_chunk via
+    lax.scan: the expanded (B,E,C,D) dispatch buffers scale with the CHUNK,
+    not the sequence — the peak-memory fix that keeps 32k-token MoE training
+    inside HBM (EXPERIMENTS.md §Dry-run)."""
+    B, S, D = h.shape
+    G = min(cfg.moe_seq_chunk, S)
+    if S > G and S % G == 0:
+        nch = S // G
+        hs = h.reshape(B, nch, G, D).swapaxes(0, 1)  # (nch,B,G,D)
+
+        def body(aux, h_c):
+            out_c, a = _moe_group(cfg, p, h_c)
+            return aux + a, out_c
+
+        aux, outs = jax.lax.scan(body, jnp.float32(0.0), hs)
+        out = outs.swapaxes(0, 1).reshape(B, S, D)
+        return constrain(out, "batch", "seq", "embed"), aux / nch
+    return _moe_group(cfg, p, h)
+
+
+def _moe_group(cfg: ModelConfig, p, h):
+    B, S, D = h.shape
+    E, k = cfg.num_experts, cfg.top_k
+    C = capacity(cfg, S)
+    dt = jnp.dtype(cfg.compute_dtype)
+
+    logits = jnp.einsum("bsd,de->bse", h.astype(jnp.float32), p["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)  # (B,S,E) fp32
+    top_g, top_e = jax.lax.top_k(gates, k)   # (B,S,k)
+    top_g = top_g / jnp.maximum(jnp.sum(top_g, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss (per group, averaged).
+    me = jnp.mean(gates, axis=1)  # (B,E)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32), axis=1) / S,
+        axis=0,
+    )
+    aux = E * jnp.mean(jnp.sum(me * ce[None], axis=-1))
+
+    # --- group-local dispatch --------------------------------------------
+    flat_e = top_e.reshape(B, S * k)                       # expert id per slot
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)    # (B,S*k,E)
+    pos = jnp.cumsum(onehot, axis=1) * onehot              # 1-based position
+    pos_in_e = jnp.sum(pos, axis=-1) - 1                   # (B,S*k)
+    keep = (pos_in_e >= 0) & (pos_in_e < C)
+    tok_idx = jnp.broadcast_to(jnp.arange(S)[:, None], (S, k)).reshape(S * k)
+    tok_idx = jnp.broadcast_to(tok_idx[None], (B, S * k))
+
+    b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S * k))
+    safe_pos = jnp.clip(pos_in_e, 0, C - 1)
+    # (B,E,C) buffer of token indices; sentinel S points at a zero row.
+    idxbuf = jnp.full((B, E, C), S, jnp.int32)
+    idxbuf = idxbuf.at[b_idx, flat_e, safe_pos].set(
+        jnp.where(keep, tok_idx, S), mode="drop"
+    )
+
+    h_pad = jnp.concatenate([h, jnp.zeros((B, 1, D), h.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        h_pad[:, :, None, :], idxbuf.reshape(B, E * C)[:, :, None, None], axis=1
+    ).reshape(B, E, C, D)
+    # 'experts' is shardable when the rules put the model axis on it (EP);
+    # under the default TP-MoE policy these dims stay unsharded.
+    xe = constrain(xe, "batch", "experts", None, "embed")
+
+    w1, w3, w2 = cast(p["w1"], dt), cast(p["w3"], dt), cast(p["w2"], dt)
+    a = jnp.einsum("becd,edf->becf", xe, w1)
+    g = jnp.einsum("becd,edf->becf", xe, w3)
+    a = constrain(a, "batch", "experts", None, "ffn")
+    z = jax.nn.silu(a) * g
+    ye = jnp.einsum("becf,efd->becd", z, w2)
+    ye = constrain(ye, "batch", "experts", None, "embed")
+
+    # --- combine: gather each slot's expert output, weight, scatter-add ---
+    contrib = jnp.take_along_axis(
+        ye.reshape(B, E * C, D),
+        (flat_e * C + safe_pos)[:, :, None],
+        axis=1,
+    )  # (B, S*k, D)
+    w = jnp.where(keep, top_g.reshape(B, S * k), 0.0).astype(contrib.dtype)
+    contrib = contrib * w[..., None]
+    out = jnp.zeros((B, S, D), contrib.dtype)
+    out = out.at[b_idx, tok_idx].add(contrib, mode="drop")
+    return constrain(out.astype(h.dtype), "batch", "seq", "embed"), aux

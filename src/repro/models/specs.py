@@ -1,0 +1,65 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell — the
+dry-run's no-allocation input contract (weak-type-correct, shardable)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (
+    KIND_DECODE, KIND_PREFILL, KIND_TRAIN, ModelConfig, ShapeConfig,
+)
+from repro.models.frontends import text_len
+from repro.models.transformer import decode_state_axes, init_decode_state
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Model-input ShapeDtypeStructs for a shape cell.
+
+    train:   {'tokens','labels'[,'frontend']}
+    prefill: {'tokens'[,'frontend']}
+    decode:  {'tokens'} + a decode state from decode_state_specs().
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tl = text_len(cfg, S)
+    if shape.kind == KIND_TRAIN:
+        out = {"tokens": _sd((B, tl), "int32"), "labels": _sd((B, S), "int32")}
+    elif shape.kind == KIND_PREFILL:
+        out = {"tokens": _sd((B, tl), "int32")}
+    else:  # decode: one new token against a seq_len cache
+        out = {"tokens": _sd((B, 1), "int32")}
+    if cfg.frontend == "vision" and shape.kind != KIND_DECODE:
+        out["frontend"] = _sd((B, cfg.frontend_tokens, cfg.d_model), cfg.compute_dtype)
+    elif cfg.frontend == "audio" and shape.kind != KIND_DECODE:
+        out["frontend"] = _sd((B, tl, cfg.d_model), cfg.compute_dtype)
+    return out
+
+
+def batch_axes_tree(cfg: ModelConfig, shape: ShapeConfig):
+    """Logical axes for batch_specs (drives in_shardings)."""
+    out = {"tokens": ("batch", "seq")}
+    if shape.kind == KIND_TRAIN:
+        out["labels"] = ("batch", "seq")
+    if "frontend" in batch_specs(cfg, shape):
+        out["frontend"] = ("batch", "seq", "embed")
+    return out
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract decode state (KV caches of seq_len) via eval_shape."""
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len,
+                                  prefilled=0)
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Everything the lowered step consumes (minus train state params)."""
+    specs = {"batch": batch_specs(cfg, shape)}
+    if shape.kind == KIND_DECODE:
+        specs["state"] = decode_state_specs(cfg, shape)
+    return specs

@@ -1,0 +1,244 @@
+"""Mamba-2 / SSD (state-space duality) mixer — TPU-native chunked form.
+
+Training/prefill uses the SSD chunked algorithm: intra-chunk quadratic
+attention-like matmuls (MXU-friendly (Q x Q) per head) + an O(S/chunk)
+inter-chunk state recurrence (lax.scan).  Decode is the O(1) recurrent
+update.  The Pallas kernel (repro.kernels.ssd_scan) accelerates the
+intra-chunk part; this module is the XLA path and oracle.
+
+Layout convention: d_inner is heads-major, i.e. x.reshape(B,S,nh,hp) shards
+consistently when d_inner is sharded over 'model' (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import _dense_init, cast, rmsnorm_gated
+
+
+def ssm_axes(cfg: ModelConfig):
+    return {
+        "in_z": ("embed", "d_inner"),
+        "in_x": ("embed", "d_inner"),
+        "in_B": ("embed", "ssm_state"),
+        "in_C": ("embed", "ssm_state"),
+        "in_dt": ("embed", "ssm_heads"),
+        "conv_x": ("conv", "d_inner"),
+        "conv_B": ("conv", "ssm_state"),
+        "conv_C": ("conv", "ssm_state"),
+        "A_log": ("ssm_heads",),
+        "D_skip": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": ("d_inner",),
+        "out": ("d_inner", "embed"),
+    }
+
+
+def init_ssm(key, cfg: ModelConfig):
+    D, din, ds, nh, cw = (
+        cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv,
+    )
+    ks = jax.random.split(key, 8)
+    params = {
+        "in_z": _dense_init(ks[0], (D, din)),
+        "in_x": _dense_init(ks[1], (D, din)),
+        "in_B": _dense_init(ks[2], (D, ds)),
+        "in_C": _dense_init(ks[3], (D, ds)),
+        "in_dt": _dense_init(ks[4], (D, nh), scale=0.02),
+        "conv_x": _dense_init(ks[5], (cw, din), scale=1.0 / np.sqrt(cw)),
+        "conv_B": _dense_init(ks[6], (cw, ds), scale=1.0 / np.sqrt(cw)),
+        "conv_C": _dense_init(ks[7], (cw, ds), scale=1.0 / np.sqrt(cw)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((din,), jnp.float32),
+        "out": _dense_init(ks[0], (din, D), scale=1.0 / np.sqrt(din) / np.sqrt(2 * cfg.num_layers)),
+    }
+    return params, ssm_axes(cfg)
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv: x (B,S,C), w (cw,C)."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + xp[:, i : i + S, :] * w[i][None, None, :]
+    return jax.nn.silu(out)
+
+
+def _projections(cfg: ModelConfig, p, h):
+    dt_ = jnp.dtype(cfg.compute_dtype)
+    z = jnp.einsum("bsd,di->bsi", h, cast(p["in_z"], dt_))
+    x = jnp.einsum("bsd,di->bsi", h, cast(p["in_x"], dt_))
+    Bc = jnp.einsum("bsd,dn->bsn", h, cast(p["in_B"], dt_))
+    Cc = jnp.einsum("bsd,dn->bsn", h, cast(p["in_C"], dt_))
+    dt_raw = jnp.einsum("bsd,dn->bsn", h, cast(p["in_dt"], dt_))
+    z = constrain(z, "batch", "seq", "d_inner")
+    x = constrain(x, "batch", "seq", "d_inner")
+    return z, x, Bc, Cc, dt_raw
+
+
+def ssd_chunked(x, dt, A, Bc, Cc, chunk, initial_state=None):
+    """The SSD chunked scan (pure jnp oracle; mirrored by the Pallas kernel).
+
+    x (B,S,nh,hp); dt (B,S,nh) (already softplus'ed); A (nh,) negative;
+    Bc/Cc (B,S,ds) shared over heads.  Returns (y (B,S,nh,hp),
+    final_state (B,nh,hp,ds)).
+    """
+    B, S, nh, hp = x.shape
+    ds = Bc.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    a = (dt * A[None, None, :]).astype(jnp.float32)       # (B,S,nh) log-decay
+    ar = a.reshape(B, nc, Q, nh)
+    cum = jnp.cumsum(ar, axis=2)                          # (B,nc,Q,nh)
+    cum_h = cum.transpose(0, 1, 3, 2)                     # (B,nc,nh,Q)
+    xr = x.reshape(B, nc, Q, nh, hp)
+    dtr = dt.reshape(B, nc, Q, nh).astype(jnp.float32)
+    Br = Bc.reshape(B, nc, Q, ds).astype(jnp.float32)
+    Cr = Cc.reshape(B, nc, Q, ds).astype(jnp.float32)
+
+    # intra-chunk (quadratic within chunk).  Mask BEFORE exp: the masked
+    # upper triangle has positive diffs whose exp overflows, and grad through
+    # where(c, inf, 0) is NaN (0 * inf).
+    CB = jnp.einsum("bcqn,bcsn->bcqs", Cr, Br)            # (B,nc,Q,Q)
+    diff = cum_h[..., :, None] - cum_h[..., None, :]      # (B,nc,nh,Q,Q)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.exp(jnp.where(causal[None, None, None], diff, -1e30))
+    w = CB[:, :, None] * decay * dtr.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", w, xr.astype(jnp.float32))
+
+    # chunk states: sum_s exp(cum_last - cum_s) * dt_s * B_s (x) x_s
+    dec_last = jnp.exp(cum_h[..., -1:] - cum_h)           # (B,nc,nh,Q)
+    sd = dec_last * dtr.transpose(0, 1, 3, 2)             # (B,nc,nh,Q)
+    states = jnp.einsum("bchs,bcsn,bcshp->bchpn", sd, Br, xr.astype(jnp.float32))
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum_h[..., -1])                 # (B,nc,nh)
+    if initial_state is None:
+        init = jnp.zeros((B, nh, hp, ds), jnp.float32)
+    else:
+        init = initial_state.astype(jnp.float32)
+
+    def body(carry, xs):
+        dec_c, st_c = xs  # (B,nh), (B,nh,hp,ds)
+        prev = carry
+        new = prev * dec_c[..., None, None] + st_c
+        return new, prev
+
+    (final, prevs) = jax.lax.scan(
+        body, init,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)),
+    )
+    prevs = prevs.transpose(1, 0, 2, 3, 4)                # (B,nc,nh,hp,ds)
+
+    # inter-chunk output: C_t . (decay-to-t * state_entering_chunk)
+    dec_in = jnp.exp(cum_h)                               # (B,nc,nh,Q)
+    y_inter = jnp.einsum("bcqn,bchpn,bchq->bcqhp", Cr, prevs, dec_in)
+
+    y = (y_intra + y_inter).reshape(B, S, nh, hp).astype(x.dtype)
+    return y, final.astype(x.dtype)
+
+
+def ssm_forward(cfg: ModelConfig, p, h, *, return_cache=False):
+    """Train / prefill.  h (B,S,D) -> out (B,S,D) [, cache dict]."""
+    B, S, D = h.shape
+    nh, hp, ds, cw = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_conv
+    z, x, Bc, Cc, dt_raw = _projections(cfg, p, h)
+    dt_ = jnp.dtype(cfg.compute_dtype)
+
+    x = _causal_conv(x, cast(p["conv_x"], dt_))
+    Bc = _causal_conv(Bc, cast(p["conv_B"], dt_))
+    Cc = _causal_conv(Cc, cast(p["conv_C"], dt_))
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(B, S, nh, hp)
+    if cfg.attn_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.ssd_scan.ops import ssd_scan as _ssd
+
+        y, final = _ssd(xh, dt, A, Bc, Cc, chunk=cfg.ssm_chunk,
+                        interpret=(cfg.attn_impl == "pallas_interpret"))
+    else:
+        y, final = ssd_chunked(xh, dt, A, Bc, Cc, cfg.ssm_chunk)
+    y = y + xh * p["D_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, nh * hp)
+    y = rmsnorm_gated(p["norm"], y, z, cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, cast(p["out"], dt_))
+    out = constrain(out, "batch", "seq", "embed")
+    if not return_cache:
+        return out, None
+    # prefill cache: final SSM state + last (cw-1) pre-activation conv inputs
+    # (recompute raw projections' tail — cheap, avoids storing full streams)
+    conv_tail = {
+        "x": jax.lax.stop_gradient(_tail_raw(cfg, p, h, "in_x", cw)),
+        "B": jax.lax.stop_gradient(_tail_raw(cfg, p, h, "in_B", cw)),
+        "C": jax.lax.stop_gradient(_tail_raw(cfg, p, h, "in_C", cw)),
+    }
+    return out, {"ssm": final, "conv": conv_tail}
+
+
+def _tail_raw(cfg, p, h, name, cw):
+    dt_ = jnp.dtype(cfg.compute_dtype)
+    tail = h[:, -(cw - 1) :, :]
+    return jnp.einsum("bsd,dn->bsn", tail, cast(p[name], dt_))
+
+
+def init_ssm_cache(cfg: ModelConfig, batch, dtype):
+    nh, hp, ds, cw, din = (
+        cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_conv, cfg.d_inner,
+    )
+    return {
+        "ssm": jnp.zeros((batch, nh, hp, ds), dtype),
+        "conv": {
+            "x": jnp.zeros((batch, cw - 1, din), dtype),
+            "B": jnp.zeros((batch, cw - 1, ds), dtype),
+            "C": jnp.zeros((batch, cw - 1, ds), dtype),
+        },
+    }
+
+
+def ssm_decode_forward(cfg: ModelConfig, p, h, cache):
+    """One-token decode.  h (B,1,D); cache {'ssm' (B,nh,hp,ds), 'conv' {...}}."""
+    B = h.shape[0]
+    nh, hp, ds, cw = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_conv
+    z, x_raw, B_raw, C_raw, dt_raw = _projections(cfg, p, h)
+    dt_ = jnp.dtype(cfg.compute_dtype)
+
+    def conv_step(raw_new, tail, w):
+        # tail (B,cw-1,C) raw history; raw_new (B,1,C)
+        window = jnp.concatenate([tail, raw_new], axis=1)  # (B,cw,C)
+        out = jnp.einsum("bsc,sc->bc", window, w)[:, None, :]
+        return jax.nn.silu(out), window[:, 1:, :]
+
+    x, tail_x = conv_step(x_raw, cache["conv"]["x"], cast(p["conv_x"], dt_))
+    Bc, tail_B = conv_step(B_raw, cache["conv"]["B"], cast(p["conv_B"], dt_))
+    Cc, tail_C = conv_step(C_raw, cache["conv"]["C"], cast(p["conv_C"], dt_))
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"][None])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    xh = x[:, 0].reshape(B, nh, hp).astype(jnp.float32)
+    decay = jnp.exp(dt * A[None])  # (B,nh)
+    state = cache["ssm"].astype(jnp.float32)
+    state = state * decay[..., None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", Bc[:, 0].astype(jnp.float32), xh, dt
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cc[:, 0].astype(jnp.float32), state)
+    y = y + xh * p["D_skip"][None, :, None]
+    y = y.reshape(B, 1 * nh * hp)[:, None, :].astype(h.dtype)
+    y = rmsnorm_gated(p["norm"], y, z, cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, cast(p["out"], dt_))
+    new_cache = {
+        "ssm": state.astype(cache["ssm"].dtype),
+        "conv": {"x": tail_x, "B": tail_B, "C": tail_C},
+    }
+    return out, new_cache

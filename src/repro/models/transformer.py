@@ -1,0 +1,307 @@
+"""LM backbone: period-structured blocks (attention / mamba2 mixers, dense /
+MoE / no FFN) scanned over depth with per-block remat.
+
+The scan-over-blocks layout keeps HLO size O(1) in depth, which is what makes
+512-device dry-run compiles of 80-layer models tractable; block params are
+stacked on a leading 'blocks' axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (
+    FFN_DENSE, FFN_MOE, FFN_NONE, MIXER_ATTN, MIXER_MAMBA2, ModelConfig,
+)
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.frontends import apply_frontend
+from repro.models.layers import (
+    chunked_cross_entropy, embed_tokens, init_embedding, init_rmsnorm,
+    lm_head_weight, rmsnorm,
+)
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _is_axes_leaf(t):
+    return isinstance(t, tuple) and all(isinstance(x, (str, type(None))) for x in t)
+
+
+def _init_block(cfg: ModelConfig, key):
+    params = {}
+    specs = cfg.layer_specs()
+    keys = jax.random.split(key, 2 * len(specs))
+    for i, spec in enumerate(specs):
+        pp = {}
+        pp["norm1"], _ = init_rmsnorm(cfg.d_model)
+        if spec.mixer == MIXER_ATTN:
+            pp["mixer"], _ = attn_mod.init_attention(keys[2 * i], cfg)
+        else:
+            pp["mixer"], _ = ssm_mod.init_ssm(keys[2 * i], cfg)
+        if spec.ffn != FFN_NONE:
+            pp["norm2"], _ = init_rmsnorm(cfg.d_model)
+            if spec.ffn == FFN_MOE:
+                pp["ffn"], _ = moe_mod.init_moe(keys[2 * i + 1], cfg)
+            else:
+                from repro.models.layers import init_mlp
+
+                pp["ffn"], _ = init_mlp(keys[2 * i + 1], cfg)
+        params[f"pos{i}"] = pp
+    return params
+
+
+def _block_axes(cfg: ModelConfig):
+    from repro.models.attention import attention_axes
+    from repro.models.layers import embedding_axes, mlp_axes
+    from repro.models.moe import moe_axes
+    from repro.models.ssm import ssm_axes
+
+    axes = {}
+    for i, spec in enumerate(cfg.layer_specs()):
+        pa = {"norm1": {"scale": ("embed",)}}
+        pa["mixer"] = attention_axes(cfg) if spec.mixer == MIXER_ATTN else ssm_axes(cfg)
+        if spec.ffn != FFN_NONE:
+            pa["norm2"] = {"scale": ("embed",)}
+            pa["ffn"] = moe_axes(cfg) if spec.ffn == FFN_MOE else mlp_axes(cfg)
+        axes[f"pos{i}"] = pa
+    return axes
+
+
+def params_axes(cfg: ModelConfig):
+    """Logical dim-name metadata tree matching init_params' params tree."""
+    from repro.models.layers import embedding_axes
+
+    axes = {
+        "embed": embedding_axes(cfg),
+        "blocks": jax.tree_util.tree_map(
+            lambda t: ("blocks",) + t, _block_axes(cfg), is_leaf=_is_axes_leaf
+        ),
+        "final_norm": {"scale": ("embed",)},
+    }
+    return axes
+
+
+def init_params(cfg: ModelConfig, key):
+    """Returns (params, axes).  Block leaves are stacked on a 'blocks' axis.
+    Leaves are stored in cfg.param_dtype (bf16 for serving profiles)."""
+    k_embed, k_blocks = jax.random.split(key)
+    params = {}
+    params["embed"], _ = init_embedding(k_embed, cfg)
+    block_keys = jax.random.split(k_blocks, cfg.num_blocks)
+    params["blocks"] = jax.vmap(lambda k: _init_block(cfg, k))(block_keys)
+    params["final_norm"], _ = init_rmsnorm(cfg.d_model)
+    pdt = jnp.dtype(cfg.param_dtype)
+    if pdt != jnp.float32:
+        params = jax.tree_util.tree_map(lambda x: x.astype(pdt), params)
+    return params, params_axes(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+
+def _block_forward(cfg: ModelConfig, bp, h, positions, mode, caches, cache_index):
+    """One period block (cfg.block_size layers).  Returns (h, new_caches, aux)."""
+    specs = cfg.layer_specs()
+    new_caches = {}
+    aux = jnp.float32(0.0)
+    for i, spec in enumerate(specs):
+        pp = bp[f"pos{i}"]
+        r = rmsnorm(pp["norm1"], h, cfg.norm_eps)
+        if spec.mixer == MIXER_ATTN:
+            if mode == "decode":
+                out, nc = attn_mod.decode_attention_forward(
+                    cfg, pp["mixer"], r, caches[f"pos{i}"], cache_index
+                )
+            else:
+                out, (k, v) = attn_mod.attention_forward(cfg, pp["mixer"], r, positions)
+                nc = {"k": k, "v": v} if mode == "prefill" else None
+        else:
+            if mode == "decode":
+                out, nc = ssm_mod.ssm_decode_forward(cfg, pp["mixer"], r, caches[f"pos{i}"])
+            else:
+                out, nc = ssm_mod.ssm_forward(
+                    cfg, pp["mixer"], r, return_cache=(mode == "prefill")
+                )
+        h = h + out
+        if spec.ffn != FFN_NONE:
+            r = rmsnorm(pp["norm2"], h, cfg.norm_eps)
+            if spec.ffn == FFN_MOE:
+                out, a = moe_mod.moe_forward(cfg, pp["ffn"], r)
+                aux = aux + a
+            else:
+                from repro.models.layers import mlp_forward
+
+                out = mlp_forward(cfg, pp["ffn"], r)
+            h = h + out
+        h = constrain(h, "batch", "seq", "embed")
+        if mode in ("prefill", "decode"):
+            new_caches[f"pos{i}"] = nc if nc is not None else {}
+    return h, new_caches, aux
+
+
+def _stack_forward(cfg: ModelConfig, blocks, h, positions, mode,
+                   caches=None, cache_index=None):
+    """Scan blocks over depth.  Returns (h, stacked_new_caches, aux_total)."""
+
+    if mode == "train":
+
+        def body(carry, bp):
+            hh, aux = carry
+            hh, _, a = _block_forward(cfg, bp, hh, positions, "train", None, None)
+            return (hh, aux + a), None
+
+        if cfg.remat:
+            policy = (
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                if cfg.remat_policy == "dots" else None
+            )
+            body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+        if cfg.scan_layers:
+            (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), blocks)
+        else:
+            carry = (h, jnp.float32(0.0))
+            for b in range(cfg.num_blocks):
+                carry, _ = body(carry, jax.tree_util.tree_map(lambda x: x[b], blocks))
+            h, aux = carry
+        return h, None, aux
+
+    if mode == "prefill":
+
+        def body(hh, bp):
+            hh, nc, _ = _block_forward(cfg, bp, hh, positions, "prefill", None, None)
+            return hh, nc
+
+        if cfg.scan_layers:
+            h, caches_out = jax.lax.scan(body, h, blocks)
+        else:
+            ncs = []
+            for b in range(cfg.num_blocks):
+                h, nc = body(h, jax.tree_util.tree_map(lambda x: x[b], blocks))
+                ncs.append(nc)
+            caches_out = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ncs)
+        return h, caches_out, jnp.float32(0.0)
+
+    # decode
+    def body(hh, xs):
+        bp, cache = xs
+        hh, nc, _ = _block_forward(cfg, bp, hh, positions, "decode", cache, cache_index)
+        return hh, nc
+
+    if cfg.scan_layers:
+        h, caches_out = jax.lax.scan(body, h, (blocks, caches))
+    else:
+        ncs = []
+        for b in range(cfg.num_blocks):
+            h, nc = body(
+                h,
+                (
+                    jax.tree_util.tree_map(lambda x: x[b], blocks),
+                    jax.tree_util.tree_map(lambda x: x[b], caches),
+                ),
+            )
+            ncs.append(nc)
+        caches_out = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ncs)
+    return h, caches_out, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params, tokens, frontend=None):
+    """Full forward to final hidden states.  Returns (h, aux_loss)."""
+    h = embed_tokens(cfg, params["embed"], tokens)
+    h = apply_frontend(cfg, h, frontend)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    h, _, aux = _stack_forward(cfg, params["blocks"], h, positions, "train")
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, aux
+
+
+def lm_loss(cfg: ModelConfig, params, batch):
+    """batch: {'tokens' (B,S_text), 'labels' (B,S_total), ['frontend']}."""
+    h, aux = forward(cfg, params, batch["tokens"], batch.get("frontend"))
+    w_head = lm_head_weight(cfg, params["embed"])
+    loss = chunked_cross_entropy(cfg, h, w_head, batch["labels"])
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params, tokens, frontend=None):
+    """Prefill: returns (last-position logits (B,V), caches, next_index)."""
+    h = embed_tokens(cfg, params["embed"], tokens)
+    h = apply_frontend(cfg, h, frontend)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    h, caches, _ = _stack_forward(cfg, params["blocks"], h, positions, "prefill")
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    w_head = lm_head_weight(cfg, params["embed"])
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], w_head).astype(jnp.float32)
+    logits = constrain(logits, "batch", "vocab")
+    return logits, caches, jnp.int32(S)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, prefilled: int = 0):
+    """Zero-initialized decode caches (leaves stacked over blocks)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    per_pos = {}
+    for i, spec in enumerate(cfg.layer_specs()):
+        if spec.mixer == MIXER_ATTN:
+            c = {
+                "k": jnp.zeros((batch, max_seq, cfg.num_kv_heads, cfg.head_dim), dt),
+                "v": jnp.zeros((batch, max_seq, cfg.num_kv_heads, cfg.head_dim), dt),
+            }
+        else:
+            c = ssm_mod.init_ssm_cache(cfg, batch, dt)
+        per_pos[f"pos{i}"] = c
+    caches = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_blocks,) + x.shape), per_pos
+    )
+    return {"caches": caches, "index": jnp.int32(prefilled)}
+
+
+def decode_state_axes(cfg: ModelConfig):
+    """Logical axes for the decode state (mirrors init_decode_state)."""
+    per_pos = {}
+    for i, spec in enumerate(cfg.layer_specs()):
+        if spec.mixer == MIXER_ATTN:
+            c = {
+                "k": ("blocks", "batch", "cache_seq", "kv_heads", "head_dim"),
+                "v": ("blocks", "batch", "cache_seq", "kv_heads", "head_dim"),
+            }
+        else:
+            c = {
+                "ssm": ("blocks", "batch", "ssm_heads", None, "ssm_state"),
+                "conv": {
+                    "x": ("blocks", "batch", None, "d_inner"),
+                    "B": ("blocks", "batch", None, "ssm_state"),
+                    "C": ("blocks", "batch", None, "ssm_state"),
+                },
+            }
+        per_pos[f"pos{i}"] = c
+    return {"caches": per_pos, "index": ()}
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens):
+    """One decode step.  tokens (B,1) -> (logits (B,V), new_state)."""
+    h = embed_tokens(cfg, params["embed"], tokens)
+    idx = state["index"]
+    positions = jnp.full((h.shape[0], 1), idx, jnp.int32)
+    h, new_caches, _ = _stack_forward(
+        cfg, params["blocks"], h, positions, "decode",
+        caches=state["caches"], cache_index=idx,
+    )
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    w_head = lm_head_weight(cfg, params["embed"])
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], w_head).astype(jnp.float32)
+    logits = constrain(logits, "batch", "vocab")
+    return logits, {"caches": new_caches, "index": idx + 1}

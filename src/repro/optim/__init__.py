@@ -1,0 +1,2 @@
+from repro.optim.adamw import adamw_init, adamw_update, TrainState, apply_gradients
+from repro.optim.schedules import cosine_schedule

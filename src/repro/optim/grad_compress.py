@@ -1,0 +1,41 @@
+"""Error-feedback int8 gradient compression (1-bit-Adam-family technique).
+
+Beyond-paper distributed-optimization feature: before the DP all-reduce,
+gradients are quantized to int8 with a per-tensor scale; the quantization
+error is carried to the next step (error feedback), which keeps SGD/Adam
+convergence (Karimireddy et al., arXiv:1901.09847).
+
+Under GSPMD the all-reduce itself is compiler-inserted; quantizing the
+*gradient values* shrinks the reduce payload when XLA reduces in the narrow
+dtype.  We expose the numerics here (value-level quantization + EF) so the
+training loop is faithful to what a bandwidth-constrained deployment runs;
+the collective-bytes win is reported in the roofline iteration log.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x32):
+    amax = jnp.max(jnp.abs(x32))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(grads, err):
+    """Quantize (grad + carried error) to int8, return dequantized grads and
+    the new error residual.  Pure value-level transform; shape-preserving."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), g32 - deq
+
+    out = jax.tree_util.tree_map(one, grads, err)
+    new_g = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_e = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_g, new_e

@@ -1,0 +1,25 @@
+"""LR schedules.  The paper trains with AdamW + cosine annealing (SGDR-style,
+no restarts) from lr0=7e-4; we add linear warmup for large-batch stability."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr, total_steps, warmup_steps=0, min_ratio=0.01):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.where(
+        warmup_steps > 0, jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0), 1.0
+    )
+    t = jnp.clip(
+        (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+    )
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return base_lr * warm * cos
+
+
+def constant_schedule(step, *, base_lr, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), base_lr)
+
+
+SCHEDULES = {"cosine": cosine_schedule, "constant": constant_schedule}

@@ -1,0 +1,5 @@
+from repro.sim.hardware import PLATFORMS, HardwareConfig
+from repro.sim.timing import simulate_kernel, KernelMetrics
+from repro.sim.simulate import (
+    simulate_program, reconstruct, sampling_error, speedup, SamplingPlan,
+)

@@ -1,0 +1,92 @@
+"""Full vs sampled simulation: run the timing model over a program, apply a
+SamplingPlan (clusters + representatives + weights), reconstruct full-workload
+metrics, and compute the paper's error (eq. 5) and speedup (eq. 6)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.sim.hardware import PLATFORMS, HardwareConfig
+from repro.sim.timing import KernelMetrics, simulate_kernel
+from repro.tracing.programs import Program
+
+METRIC_NAMES = ("cycles", "ipc", "l1_hit", "l2_hit", "occupancy")
+
+
+@dataclass
+class SamplingPlan:
+    """labels[i] = cluster of invocation i; reps[c] = representative
+    invocation indices (usually one; STEM+ROOT may pick several)."""
+    labels: np.ndarray               # (n_kernels,) int
+    reps: dict[int, list[int]]       # cluster -> kernel indices
+    method: str = ""
+    extra: dict = field(default_factory=dict)
+
+    @property
+    def num_clusters(self) -> int:
+        return len(self.reps)
+
+    def rep_indices(self) -> list[int]:
+        out = set()
+        for v in self.reps.values():
+            out.update(v)
+        return sorted(out)
+
+
+def simulate_program(program: Program, platform: str = "P1") -> list[KernelMetrics]:
+    hw = PLATFORMS[platform]
+    return [simulate_kernel(k.stats(platform), hw) for k in program.kernels]
+
+
+def _weighted_metrics(metrics, weights):
+    """Aggregate: cycles = weighted sum; rates/IPC = cycle-weighted mean."""
+    cycles = np.array([m.cycles for m in metrics])
+    w = np.asarray(weights, np.float64)
+    tot_cycles = float(np.sum(cycles * w))
+    cw = cycles * w
+    denom = max(tot_cycles, 1e-12)
+    out = {"cycles": tot_cycles}
+    for name in ("ipc", "l1_hit", "l2_hit", "occupancy"):
+        vals = np.array([getattr(m, name) for m in metrics])
+        out[name] = float(np.sum(vals * cw) / denom)
+    return out
+
+
+def reconstruct(plan: SamplingPlan, metrics: list[KernelMetrics]):
+    """Sampled estimate: each cluster contributes the mean of its
+    representatives' metrics scaled by the cluster's invocation count."""
+    reps, weights = [], []
+    for c, rep_idx in plan.reps.items():
+        count = int(np.sum(plan.labels == c))
+        share = count / len(rep_idx)
+        for r in rep_idx:
+            reps.append(metrics[r])
+            weights.append(share)
+    return _weighted_metrics(reps, weights)
+
+
+def full_metrics(metrics: list[KernelMetrics]):
+    return _weighted_metrics(metrics, np.ones(len(metrics)))
+
+
+def sampling_error(plan: SamplingPlan, metrics: list[KernelMetrics], name="cycles"):
+    """Paper eq. 5: |full - sampled| / full * 100%."""
+    full = full_metrics(metrics)[name]
+    sampled = reconstruct(plan, metrics)[name]
+    return abs(full - sampled) / max(abs(full), 1e-12) * 100.0
+
+
+def speedup(plan: SamplingPlan, metrics: list[KernelMetrics]) -> float:
+    """Paper eq. 6: full kernel execution time / representative exec time."""
+    full_t = sum(m.time_s for m in metrics)
+    rep_t = sum(metrics[i].time_s for i in plan.rep_indices())
+    return full_t / max(rep_t, 1e-12)
+
+
+def sim_wall_time(metrics: list[KernelMetrics], indices=None) -> float:
+    """End-to-end simulator wall-time (§5.4) for all or selected kernels."""
+    if indices is None:
+        return sum(m.sim_time_s for m in metrics)
+    return sum(metrics[i].sim_time_s for i in indices)

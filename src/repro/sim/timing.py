@@ -1,0 +1,125 @@
+"""Stall-aware cycle-approximate GPU timing model (HyFiSS-flavored).
+
+Interval model: per-SM issue throughput is bounded by warp-level parallelism
+via Little's law (active_warps x ILP / weighted latency), and the kernel is
+bounded by the max of compute issue, L2 and DRAM service times.  Cache hit
+rates come from an analytic reuse/capacity model over the kernel's working
+set and access pattern.  Deterministic in (KernelStats, HardwareConfig).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.sim.hardware import HardwareConfig
+from repro.tracing.isa import CLASS_IDS, INSTR_CLASSES
+from repro.tracing.tracer import KernelStats
+
+# per-class issue latencies (cycles) and throughput weights
+CLASS_LATENCY = {
+    "mem_load": 1.0, "mem_store": 1.0, "smem": 1.0, "fp": 1.0, "alu": 1.0,
+    "sfu": 4.0, "tensor": 2.0, "control": 1.0, "barrier": 2.0, "shuffle": 1.0,
+}
+# execution-dependency latency per class (for Little's law)
+CLASS_EXEC_LATENCY = {
+    "mem_load": 1.0,  # replaced by cfg.mem_latency scaled by miss ratio
+    "mem_store": 8.0, "smem": 25.0, "fp": 4.0, "alu": 4.0, "sfu": 16.0,
+    "tensor": 16.0, "control": 6.0, "barrier": 25.0, "shuffle": 10.0,
+}
+
+COALESCE_FACTOR = {"coalesced": 1.0, "strided": 3.0, "random": 8.0}
+
+
+@dataclass
+class KernelMetrics:
+    cycles: float
+    time_s: float          # native execution time
+    ipc: float             # per-SM instructions/cycle
+    l1_hit: float
+    l2_hit: float
+    occupancy: float
+    dram_bytes: float
+    sim_time_s: float      # simulator wall time to model this kernel
+
+
+def _occupancy(stats: KernelStats, hw: HardwareConfig):
+    warps_per_cta = (stats.threads_per_cta + 31) // 32
+    regs_per_cta = stats.regs_per_thread * stats.threads_per_cta
+    lim_regs = max(1, hw.regs_per_sm // max(regs_per_cta, 1))
+    lim_smem = max(1, hw.smem_per_sm // max(stats.smem_per_cta, 1)) if stats.smem_per_cta else 64
+    lim_warps = max(1, hw.max_warps_per_sm // warps_per_cta)
+    ctas_per_sm = min(lim_regs, lim_smem, lim_warps, 32)
+    # can't exceed the grid itself spread over SMs
+    ctas_per_sm = min(ctas_per_sm, max(1, int(np.ceil(stats.ctas / hw.num_sms))))
+    active_warps = ctas_per_sm * warps_per_cta
+    return min(active_warps, hw.max_warps_per_sm), ctas_per_sm
+
+
+def _cache_hits(stats: KernelStats, hw: HardwareConfig, ctas_per_sm: int):
+    """Analytic reuse/capacity model."""
+    potential = max(0.0, 1.0 - 1.0 / stats.reuse_factor)
+    # L1: per-SM slice of the working set must fit
+    sms_used = min(hw.num_sms, max(stats.ctas, 1))
+    ws_per_sm = stats.working_set / max(sms_used, 1) * max(ctas_per_sm, 1) ** 0.5
+    l1_cap = min(1.0, (hw.l1_kb_per_sm * 1024.0) / max(ws_per_sm, 1.0))
+    pattern_pen = {"coalesced": 1.0, "strided": 0.7, "random": 0.25}[stats.pattern]
+    l1_hit = potential * l1_cap ** 0.5 * pattern_pen
+    # L2: whole working set vs L2 capacity
+    l2_cap = min(1.0, (hw.l2_mb * 1e6) / max(stats.working_set, 1.0))
+    resid_potential = max(0.0, potential - l1_hit) + 0.3 * (1 - potential)
+    l2_hit = min(0.95, resid_potential * l2_cap ** 0.5 + 0.15 * l2_cap)
+    return float(np.clip(l1_hit, 0.0, 0.98)), float(np.clip(l2_hit, 0.0, 0.98))
+
+
+def simulate_kernel(stats: KernelStats, hw: HardwareConfig) -> KernelMetrics:
+    active_warps, ctas_per_sm = _occupancy(stats, hw)
+    occupancy = active_warps / hw.max_warps_per_sm
+    l1_hit, l2_hit = _cache_hits(stats, hw, ctas_per_sm)
+
+    mix = stats.instr_mix  # (num_classes,)
+    # effective average execution latency per instruction
+    lat = 0.0
+    for cls in INSTR_CLASSES:
+        w = mix[CLASS_IDS[cls]]
+        if cls == "mem_load":
+            miss_lat = hw.mem_latency_cycles
+            eff = 30.0 * l1_hit + miss_lat * (1 - l1_hit) * (0.4 * l2_hit + (1 - l2_hit))
+            lat += w * eff
+        else:
+            lat += w * CLASS_EXEC_LATENCY[cls]
+    lat = max(lat, 2.0)
+
+    # issue cost per instruction (tensor/sfu lower throughput)
+    issue_cost = sum(mix[CLASS_IDS[c]] * CLASS_LATENCY[c] for c in INSTR_CLASSES)
+
+    # Little's law: sustainable IPC per SM
+    wlp_ipc = active_warps * stats.ilp / lat
+    peak_ipc = hw.schedulers_per_sm / max(issue_cost, 1e-6)
+    div_pen = 1.0 - 0.5 * stats.divergence
+    ipc = max(min(wlp_ipc, peak_ipc) * div_pen, 0.05)
+
+    sms_used = min(hw.num_sms, max(stats.ctas, 1))
+    instr_per_sm = stats.warp_instructions / sms_used
+    compute_cycles = instr_per_sm / ipc
+
+    # memory service times
+    coal = COALESCE_FACTOR[stats.pattern]
+    dram_bytes = stats.bytes_accessed * coal * (1 - l1_hit) * (1 - l2_hit)
+    l2_bytes = stats.bytes_accessed * coal * (1 - l1_hit)
+    dram_cycles = dram_bytes / hw.dram_gbps / 1e9 * hw.clock_ghz * 1e9
+    l2_cycles = l2_bytes / hw.l2_gbps / 1e9 * hw.clock_ghz * 1e9
+
+    cycles = max(compute_cycles, dram_cycles, l2_cycles) + 2000.0  # launch
+    time_s = cycles / (hw.clock_ghz * 1e9)
+    eff_ipc = instr_per_sm / cycles
+
+    # simulator wall-time model (cycle-approximate simulators run ~1e5-1e6
+    # warp-instructions/sec); constant per-kernel overhead for setup/teardown
+    sim_time_s = stats.warp_instructions / 4.0e5 + 0.05
+    return KernelMetrics(
+        cycles=float(cycles), time_s=float(time_s), ipc=float(eff_ipc),
+        l1_hit=l1_hit, l2_hit=l2_hit, occupancy=float(occupancy),
+        dram_bytes=float(dram_bytes), sim_time_s=float(sim_time_s),
+    )

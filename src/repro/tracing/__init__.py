@@ -1,0 +1,3 @@
+from repro.tracing.isa import OPCODES, OPCODE_IDS, INSTR_CLASSES
+from repro.tracing.tracer import KernelInvocation, WarpTrace, trace_kernel
+from repro.tracing.programs import PROGRAMS, get_program, lm_program

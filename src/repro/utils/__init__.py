@@ -1,0 +1,2 @@
+from repro.utils.registry import Registry
+from repro.utils.trees import tree_size_bytes, tree_param_count

@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+train step on CPU, asserting output shapes and no NaNs (assignment f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig
+from repro.configs import get_arch, list_archs, smoke_arch
+from repro.data import TokenStream
+from repro.launch.steps import make_train_step
+from repro.models import (
+    decode_step, init_decode_state, init_params, lm_loss, prefill,
+)
+from repro.models.frontends import text_len
+from repro.optim import adamw_init
+
+ALL_ARCHS = list_archs()
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    ds = TokenStream(cfg.vocab_size, S, B, seed=seed, frontend=cfg.frontend,
+                     d_model=cfg.d_model, frontend_tokens=cfg.frontend_tokens)
+    return {k: jnp.asarray(v) for k, v in ds.next().items()}
+
+
+def test_all_archs_registered():
+    assert len(ALL_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+def test_smoke_train_step(arch_id):
+    cfg = smoke_arch(arch_id)
+    assert cfg.num_layers == cfg.block_size  # one block
+    params, axes = init_params(cfg, jax.random.PRNGKey(0))
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=1, total_steps=4)
+    state = adamw_init(params, tcfg)
+    batch = _batch(cfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    new_state, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    assert int(new_state.step) == 1
+    # params changed and stayed finite
+    l0 = jax.tree_util.tree_leaves(new_state.params)
+    assert all(np.isfinite(np.asarray(x)).all() for x in l0)
+
+
+@pytest.mark.parametrize("arch_id", ["qwen2-72b", "grok-1-314b", "yi-34b",
+                                     "granite-3-2b", "musicgen-medium"])
+def test_smoke_decode_shapes(arch_id):
+    cfg = smoke_arch(arch_id)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    B = 2
+    state = init_decode_state(cfg, B, max_seq=16)
+    logits, state = decode_step(cfg, params, state, jnp.zeros((B, 1), jnp.int32))
+    assert logits.shape == (B, cfg.vocab_size)
+    assert int(state["index"]) == 1
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch_id", ["llama3.2-3b", "mamba2-780m",
+                                     "jamba-v0.1-52b", "dbrx-132b",
+                                     "paligemma-3b"])
+def test_decode_matches_prefill(arch_id):
+    """KV/SSM-cache decode reproduces teacher-forced prefill logits.
+    capacity_factor is raised so MoE token-drop (a prefill-vs-decode
+    semantic difference by design) doesn't mask cache bugs."""
+    cfg = smoke_arch(arch_id).replace(attn_chunk_threshold=10**9,
+                                      capacity_factor=8.0)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    fe = None
+    if cfg.frontend == "vision":
+        fe = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.frontend_tokens, cfg.d_model)
+        )
+    ref_logits, _, _ = prefill(cfg, params, tokens, fe)
+    # decode path needs the same prefix: feed image-less text decode only for
+    # non-frontend archs; for vlm, decode from scratch is a different prefix,
+    # so only test shape there.
+    if cfg.frontend == "vision":
+        return
+    state = init_decode_state(cfg, B, max_seq=S)
+    for t in range(S):
+        lg, state = decode_step(cfg, params, state, tokens[:, t : t + 1])
+    ref = np.asarray(ref_logits)
+    got = np.asarray(lg)
+    rel = np.max(np.abs(got - ref)) / (np.max(np.abs(ref)) + 1e-9)
+    assert rel < 2e-2, rel
+
+
+def test_full_configs_match_assignment():
+    """Published config numbers (assignment block) are encoded exactly."""
+    qwen = get_arch("qwen2-72b")
+    assert (qwen.num_layers, qwen.d_model, qwen.num_heads,
+            qwen.num_kv_heads, qwen.d_ff, qwen.vocab_size) == (
+        80, 8192, 64, 8, 29568, 152064)
+    assert qwen.qkv_bias
+    grok = get_arch("grok-1-314b")
+    assert (grok.num_experts, grok.top_k) == (8, 2)
+    dbrx = get_arch("dbrx-132b")
+    assert (dbrx.num_experts, dbrx.top_k) == (16, 4)
+    mam = get_arch("mamba2-780m")
+    assert (mam.num_heads, mam.d_ff, mam.ssm_state) == (0, 0, 128)
+    jam = get_arch("jamba-v0.1-52b")
+    specs = jam.layer_specs()
+    assert sum(1 for s in specs if s.mixer == "attention") == 1  # 1:7
+    assert sum(1 for s in specs if s.ffn == "moe") == 4  # every other layer
+    pal = get_arch("paligemma-3b")
+    assert (pal.num_kv_heads, pal.head_dim, pal.frontend_tokens) == (1, 256, 256)
+
+
+def test_param_counts_plausible():
+    from repro.config import param_counts
+
+    approx = {
+        "qwen2-72b": 72e9, "yi-34b": 34e9, "grok-1-314b": 314e9,
+        "dbrx-132b": 132e9, "llama3.2-3b": 3.2e9, "granite-3-2b": 2.6e9,
+        "mamba2-780m": 0.78e9, "jamba-v0.1-52b": 52e9,
+    }
+    for arch, expect in approx.items():
+        got = param_counts(get_arch(arch))["total"]
+        assert 0.55 * expect < got < 1.45 * expect, (arch, got, expect)

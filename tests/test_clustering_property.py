@@ -1,0 +1,71 @@
+"""Property-based tests for K-Means / silhouette / K-selection."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import (
+    kmeans, select_k_and_cluster, silhouette, _pairwise_sq,
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(10, 60), st.integers(2, 5), st.integers(0, 1000))
+def test_kmeans_assigns_nearest_centroid(n, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 8)).astype(np.float32)
+    labels, cent, inertia = kmeans(x, k, seed=seed)
+    d = np.linalg.norm(x[:, None] - cent[None], axis=-1)
+    np.testing.assert_array_equal(labels, d.argmin(1))
+    assert inertia >= 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(8, 40), st.integers(0, 1000))
+def test_silhouette_bounds(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 4)).astype(np.float32)
+    labels = rng.integers(0, 3, n)
+    if labels.max() == labels.min():
+        labels[0] = (labels[0] + 1) % 3
+    _, labels = np.unique(labels, return_inverse=True)
+    s = silhouette(x, labels)
+    assert -1.0 - 1e-6 <= s <= 1.0 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 500))
+def test_k_selection_recovers_separated_blobs(k_true, seed):
+    """Well-separated blobs -> silhouette picks the true K."""
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((k_true, 16)) * 50.0
+    x = np.concatenate(
+        [c + rng.standard_normal((20, 16)) * 0.5 for c in centers]
+    ).astype(np.float32)
+    labels, info = select_k_and_cluster(x, k_max=8, seed=0)
+    assert info["k"] == k_true
+    # perfect clustering up to relabeling
+    true = np.repeat(np.arange(k_true), 20)
+    for c in range(k_true):
+        assert len(np.unique(labels[true == c])) == 1
+
+
+def test_degenerate_points_collapse_to_one_cluster():
+    x = np.ones((50, 8), np.float32)
+    labels, info = select_k_and_cluster(x, seed=0)
+    assert info["k"] == 1
+
+
+def test_tiny_n_threshold_fallback():
+    x = np.array([[0.0, 0.0], [0.01, 0.0], [10.0, 10.0]], np.float32)
+    labels, info = select_k_and_cluster(x)
+    assert info["k"] == 2
+    assert labels[0] == labels[1] != labels[2]
+
+
+def test_pairwise_sq_correct():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((10, 3)).astype(np.float32)
+    c = rng.standard_normal((4, 3)).astype(np.float32)
+    d = np.asarray(_pairwise_sq(x, c))
+    ref = ((x[:, None] - c[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(d, ref, atol=1e-4)

@@ -1,0 +1,143 @@
+"""InfoNCE + RGCN model properties: loss semantics, padding invariance,
+pallas-path equivalence, augmentation behavior."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rgcn as rgcn_mod
+from repro.core.augment import augment_view
+from repro.core.contrastive import info_nce
+from repro.core.graphs import build_kernel_graph, pad_batch
+from repro.core.rgcn import RGCNConfig
+from repro.tracing.templates import make_kernel
+
+
+# ---------------------------------------------------------------------------
+# InfoNCE
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 1000))
+def test_infonce_symmetric(b, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    z1 = jax.random.normal(k1, (b, 8))
+    z2 = jax.random.normal(k2, (b, 8))
+    l12, _ = info_nce(z1, z2, 0.05)
+    l21, _ = info_nce(z2, z1, 0.05)
+    assert np.isclose(float(l12), float(l21), atol=1e-5)
+
+
+def test_infonce_perfect_alignment_low_loss():
+    b, d = 8, 16
+    z = jax.random.normal(jax.random.PRNGKey(0), (b, d)) * 10
+    loss_aligned, m = info_nce(z, z, 0.05)
+    z_shuf = z[jnp.roll(jnp.arange(b), 1)]
+    loss_misaligned, _ = info_nce(z, z_shuf, 0.05)
+    assert float(loss_aligned) < 0.1
+    assert float(loss_misaligned) > float(loss_aligned) + 1.0
+    assert float(m["nce_acc"]) == 1.0
+
+
+def test_infonce_lower_bound():
+    """loss >= 0 (it's a cross-entropy)."""
+    for seed in range(5):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        z1 = jax.random.normal(k1, (6, 4))
+        z2 = jax.random.normal(k2, (6, 4))
+        loss, _ = info_nce(z1, z2, 0.05)
+        assert float(loss) >= 0
+
+
+# ---------------------------------------------------------------------------
+# RGCN encoder
+# ---------------------------------------------------------------------------
+
+
+def _graphs(n=4):
+    ks = [
+        make_kernel(f"k{i}", "gemm",
+                    {"M": 128 * (i + 1), "N": 128, "K": 128}, i, seed=i)
+        for i in range(n)
+    ]
+    return [build_kernel_graph(k.trace(cap_warps=2, cap_instr=48)) for k in ks]
+
+
+def test_padding_invariance():
+    """Extra padded nodes/edges must not change kernel embeddings."""
+    graphs = _graphs(3)
+    rc = RGCNConfig()
+    params = rgcn_mod.init_rgcn(jax.random.PRNGKey(0), rc)
+    b1, w1 = pad_batch(graphs)
+    b2, w2 = pad_batch(graphs, max_nodes=b1["token"].shape[1] + 64,
+                       max_edges=b1["edge_src"].shape[1] + 128)
+    z1 = rgcn_mod.encode(params, rc, {k: jnp.asarray(v) for k, v in b1.items()}, w1)
+    z2 = rgcn_mod.encode(params, rc, {k: jnp.asarray(v) for k, v in b2.items()}, w2)
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), atol=1e-4)
+
+
+def test_pallas_path_matches_jnp_path():
+    graphs = _graphs(2)
+    batch, mw = pad_batch(graphs)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    p = rgcn_mod.init_rgcn(jax.random.PRNGKey(0), RGCNConfig())
+    z_jnp = rgcn_mod.encode(p, RGCNConfig(use_pallas=False), batch, mw)
+    z_pls = rgcn_mod.encode(p, RGCNConfig(use_pallas=True), batch, mw)
+    np.testing.assert_allclose(np.asarray(z_jnp), np.asarray(z_pls),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_embedding_dims_match_paper():
+    """z_k in R^256; projection head 256 -> 128 -> 64 (paper §3.3.2)."""
+    graphs = _graphs(2)
+    batch, mw = pad_batch(graphs)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    rc = RGCNConfig()
+    p = rgcn_mod.init_rgcn(jax.random.PRNGKey(0), rc)
+    zk = rgcn_mod.encode(p, rc, batch, mw)
+    assert zk.shape == (2, 256)
+    proj = rgcn_mod.project(p, rc, zk)
+    assert proj.shape == (2, 64)
+    assert rc.dims == (64, 128, 128, 256)
+    assert len(p["layers"]) == 3
+
+
+def test_augmentation_only_removes():
+    graphs = _graphs(4)
+    batch, _ = pad_batch(graphs)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    v, noise = augment_view(jax.random.PRNGKey(0), batch)
+    assert np.all(np.asarray(v["node_mask"]) <= np.asarray(batch["node_mask"]))
+    assert np.all(np.asarray(v["edge_mask"]) <= np.asarray(batch["edge_mask"]))
+    # dropped fraction is bounded (<= ~2x the 15% nominal rate)
+    kept = np.asarray(v["node_mask"]).sum() / np.asarray(batch["node_mask"]).sum()
+    assert kept > 0.6
+    assert set(np.unique(np.asarray(noise))).issubset({0.0, 1.0})
+
+
+def test_augmented_views_stay_close():
+    """Augmented views of the same kernel stay closer (cosine of z_k) than
+    views of behaviorally different kernels — the property contrastive
+    training relies on."""
+    k_small = make_kernel("a", "gemm", {"M": 128, "N": 128, "K": 128}, 0, 1)
+    k_diff = make_kernel("b", "traversal", {"nodes": 10_000, "degree": 8}, 1, 2)
+    graphs = [
+        build_kernel_graph(k.trace(2, 48)) for k in (k_small, k_diff)
+    ]
+    batch, mw = pad_batch(graphs)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    rc = RGCNConfig()
+    p = rgcn_mod.init_rgcn(jax.random.PRNGKey(3), rc)
+    v1, n1 = augment_view(jax.random.PRNGKey(10), batch)
+    v2, n2 = augment_view(jax.random.PRNGKey(11), batch)
+    z1 = np.asarray(rgcn_mod.encode(p, rc, v1, mw))
+    z2 = np.asarray(rgcn_mod.encode(p, rc, v2, mw))
+
+    def cos(a, b):
+        return float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-9))
+
+    same = cos(z1[0], z2[0])
+    cross = cos(z1[0], z2[1])
+    assert same > cross

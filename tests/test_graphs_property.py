@@ -1,0 +1,114 @@
+"""Property-based tests (hypothesis) for HRG construction invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graphs import NODE_INSTR, NODE_PSEUDO, NODE_VAR, build_kernel_graph
+from repro.tracing.isa import OPCODE_IDS
+from repro.tracing.templates import make_kernel
+from repro.tracing.tracer import WarpTrace
+
+
+def _random_trace(rng, n):
+    """Random but well-formed warp trace."""
+    opcode = rng.integers(0, len(OPCODE_IDS), n).astype(np.int16)
+    pc = (np.arange(n) * 16).astype(np.int32)
+    mask = np.full(n, 0xFFFFFFFF, np.uint32)
+    dest = rng.integers(-1, 8, (n, 2)).astype(np.int16)
+    src = rng.integers(-1, 8, (n, 3)).astype(np.int16)
+    mem_width = np.where(rng.random(n) < 0.2, 4, 0).astype(np.int16)
+    mem_addr = np.where(mem_width > 0, rng.integers(0, 1 << 20, n) * 64, 0)
+    vstats = rng.standard_normal((n, 8)).astype(np.float32)
+    return WarpTrace(opcode, pc, mask, dest, src, mem_width,
+                     mem_addr.astype(np.int64), vstats)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 60), st.integers(0, 10_000))
+def test_hrg_invariants(n, seed):
+    rng = np.random.default_rng(seed)
+    g = build_kernel_graph([_random_trace(rng, n)])
+
+    # edges reference valid nodes, types in [0,4)
+    assert g.edge_src.min(initial=0) >= 0
+    assert g.edge_dst.max(initial=0) < g.n_nodes
+    assert set(np.unique(g.edge_type)).issubset({0, 1, 2, 3})
+
+    # exactly n instruction nodes; control-flow chain has n-1 edges
+    assert int((g.node_type == NODE_INSTR).sum()) == n
+    cf = g.edge_type == 0
+    assert int(cf.sum()) == n - 1
+    # control flow is the temporal chain i -> i+1
+    assert np.array_equal(np.sort(g.edge_src[cf]), np.arange(n - 1))
+    assert np.array_equal(np.sort(g.edge_dst[cf]), np.arange(1, n))
+
+    # SSA: every variable node has at most one incoming data-dst edge
+    dst_w = g.edge_dst[g.edge_type == 2]
+    uniq, counts = np.unique(dst_w, return_counts=True)
+    assert (counts == 1).all()
+    # data-dst edges land on variable nodes only
+    assert (g.node_type[dst_w] == NODE_VAR).all()
+    # data-src edges originate from variable nodes only
+    src_r = g.edge_src[g.edge_type == 1]
+    assert (g.node_type[src_r] == NODE_VAR).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 10_000))
+def test_ssa_reads_see_most_recent_write(n, seed):
+    """Paper Fig. 3 (node R4): a read connects to the LATEST prior version."""
+    rng = np.random.default_rng(seed)
+    tr = _random_trace(rng, n)
+    g = build_kernel_graph([tr])
+    # reconstruct: for each data-src edge var -> instr, the var must be
+    # either an init node or a write node whose writing instruction is the
+    # most recent write of that register before the reading instruction.
+    # Build write-node -> (reg, instr) map from data-dst edges.
+    wmap = {}
+    for e in np.nonzero(g.edge_type == 2)[0]:
+        wi, vn = int(g.edge_src[e]), int(g.edge_dst[e])
+        wmap.setdefault(vn, []).append(wi)
+    for e in np.nonzero(g.edge_type == 1)[0]:
+        vn, ri = int(g.edge_src[e]), int(g.edge_dst[e])
+        if vn not in wmap:
+            continue  # init node
+        wi = wmap[vn][0]
+        assert wi < ri or wi == ri  # writes sort before reads only when < i
+        regs_written = set(tr.dest[wi][tr.dest[wi] >= 0].tolist())
+        regs_read = set(tr.src[ri][tr.src[ri] >= 0].tolist())
+        shared = regs_written & regs_read
+        assert shared, "read edge from a var whose reg isn't read"
+        # no later write to that reg strictly between wi and ri
+        for r in shared:
+            between = [
+                j for j in range(wi + 1, ri)
+                if r in tr.dest[j][tr.dest[j] >= 0].tolist()
+            ]
+            if not between:
+                return  # at least one shared reg has no intervening write
+        assert False, "stale version used"
+
+
+def test_line_sharing_structure():
+    """Loads hitting the same 128B line share a memory-variable node."""
+    rng = np.random.default_rng(0)
+    n = 8
+    tr = _random_trace(rng, n)
+    tr.mem_width[:] = 4
+    tr.opcode[:] = OPCODE_IDS["LDG"]
+    tr.dest[:] = -1
+    tr.dest[:, 0] = np.arange(n)
+    tr.mem_addr[:] = [0, 32, 64, 96, 128, 160, 4096, 8192]  # lines 0,0,0,0,1,1,32,64
+    g = build_kernel_graph([tr])
+    n_mem_vars = int(((g.node_type == NODE_VAR) & (g.token == 1)).sum())
+    assert n_mem_vars == 4  # 4 distinct lines
+
+
+def test_kernel_graph_union_of_warps():
+    k = make_kernel("t", "gemm", {"M": 128, "N": 128, "K": 128}, 0, 1)
+    g1 = build_kernel_graph(k.trace(cap_warps=1, cap_instr=64))
+    g2 = build_kernel_graph(k.trace(cap_warps=2, cap_instr=64))
+    assert g2.n_warps == 2
+    assert g2.n_nodes > g1.n_nodes
+    # warp ids partition nodes
+    assert set(np.unique(g2.warp_id)) == {0, 1}

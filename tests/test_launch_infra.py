@@ -1,0 +1,129 @@
+"""Launch-layer tests: collective-bytes HLO parser, roofline math, elastic
+checkpoint resharding across mesh shapes (subprocess: needs >1 host device),
+and a dry-run smoke cell (subprocess: forces 512 host devices)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (
+    _shape_bytes, collective_bytes_from_hlo, roofline_terms,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser (lines captured from real compiled.as_text() dumps)
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+  %all-gather.12 = f32[8,2048,6144]{1,0,2} all-gather(%bitcast_copy_fusion.5), channel_id=54, replica_groups=[16,16]<=[256]
+  %all-gather.9 = f32[8,16,1,6144]{2,1,0,3} all-gather(%convert_copy_fusion), channel_id=51
+  %all-reduce.18 = f32[8,6144,8,2]{3,2,1,0} all-reduce(%convert_bitcast_fusion.2), channel_id=55
+  %reduce-scatter.3 = bf16[64,128]{1,0} reduce-scatter(%param.7), channel_id=9
+  %collective-permute.1 = bf16[2,4]{1,0} collective-permute(%x), channel_id=3
+  %add.5 = f32[8,16]{1,0} add(%a, %b)
+  %all-to-all.2 = s32[16,4]{1,0} all-to-all(%y), channel_id=12
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,2048,6144]{1,0,2}") == 8 * 2048 * 6144 * 4
+    assert _shape_bytes("bf16[64,128]{1,0}") == 64 * 128 * 2
+    assert _shape_bytes("s32[16,4]") == 16 * 4 * 4
+    assert _shape_bytes("pred[7]") == 7
+
+
+def test_collective_parser_counts_and_bytes():
+    c = collective_bytes_from_hlo(HLO_SAMPLE)
+    assert c["op_counts"]["all-gather"] == 2
+    assert c["op_counts"]["all-reduce"] == 1
+    assert c["op_counts"]["reduce-scatter"] == 1
+    assert c["op_counts"]["collective-permute"] == 1
+    assert c["op_counts"]["all-to-all"] == 1
+    ag = 8 * 2048 * 6144 * 4 + 8 * 16 * 1 * 6144 * 4
+    assert c["by_kind_bytes"]["all-gather"] == ag
+    # plain add must not be counted
+    assert c["per_device_bytes"] < ag + 8 * 6144 * 8 * 2 * 4 + 64 * 128 * 2 \
+        + 2 * 4 * 2 + 16 * 4 * 4 + 1
+
+
+def test_roofline_terms_math():
+    rec = {
+        "num_devices": 256,
+        "cost": {"flops_per_device": 197e12, "bytes_per_device": 819e9},
+        "collectives": {"per_device_bytes": 50e9},
+        "model_flops": 197e12 * 256 * 0.5,
+    }
+    rl = roofline_terms(rec)
+    assert rl["compute_s"] == pytest.approx(1.0)
+    assert rl["memory_s"] == pytest.approx(1.0)
+    assert rl["collective_s"] == pytest.approx(1.0)
+    assert rl["useful_flop_ratio"] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# elastic resharding across mesh shapes (subprocess with 8 host devices)
+# ---------------------------------------------------------------------------
+
+ELASTIC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import CheckpointManager
+
+d = "{ckpt}"
+state = {{"w": jnp.arange(64.0).reshape(8, 8), "b": jnp.ones((8,))}}
+
+# save on a (4, 2) mesh, w sharded over 'a'
+mesh1 = jax.make_mesh((4, 2), ("a", "b"))
+sh1 = {{"w": NamedSharding(mesh1, P("a", None)), "b": NamedSharding(mesh1, P())}}
+state1 = jax.device_put(state, sh1)
+mgr = CheckpointManager(d)
+mgr.save(5, state1, specs=sh1, blocking=True)
+
+# restore on a (2, 4) mesh with a DIFFERENT sharding
+mesh2 = jax.make_mesh((2, 4), ("a", "b"))
+sh2 = {{"w": NamedSharding(mesh2, P(None, "b")), "b": NamedSharding(mesh2, P())}}
+restored, step = mgr.restore(jax.eval_shape(lambda: state), shardings=sh2)
+assert step == 5
+np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(state["w"]))
+assert restored["w"].sharding.spec == P(None, "b")
+print("ELASTIC_OK")
+"""
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    script = ELASTIC_SCRIPT.format(ckpt=str(tmp_path / "ck"))
+    out = subprocess.run(
+        [sys.executable, "-c", script], env=ENV, capture_output=True,
+        text=True, timeout=300,
+    )
+    assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# dry-run smoke (subprocess: 512 host devices; lightest cell)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_dryrun_smoke_cell(tmp_path):
+    out_json = str(tmp_path / "dr.json")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "mamba2-780m", "--shape", "long_500k", "--out", out_json],
+        env=ENV, capture_output=True, text=True, timeout=500, cwd=REPO,
+    )
+    assert "1 ok" in out.stdout, out.stdout + out.stderr[-1500:]
+    with open(out_json) as f:
+        rec = json.load(f)[0]
+    assert rec["status"] == "ok"
+    assert rec["num_devices"] == 256
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")

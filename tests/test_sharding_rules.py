@@ -1,0 +1,109 @@
+"""Sharding policy engine: divisibility-aware fallbacks, FSDP placement."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import MeshRules, spec_for
+
+
+@pytest.fixture(scope="module")
+def rules():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    # fake a 16x16 policy by overriding sizes via a subclass-free trick:
+    class R(MeshRules):
+        @property
+        def model_size(self):
+            return 16
+
+        @property
+        def fsdp_size(self):
+            return 16
+
+    return R(mesh=mesh, batch_axes=("data",))
+
+
+def test_ffn_weight_tp_plus_fsdp(rules):
+    # w1 (embed, ffn): model on ffn, fsdp on embed
+    assert spec_for(("embed", "ffn"), (8192, 29568), rules=rules,
+                    is_param=True) == P("data", "model")
+
+
+def test_vocab_not_divisible_falls_back(rules):
+    # granite vocab 49155 % 16 != 0 -> model moves to embed
+    spec = spec_for(("vocab", "embed"), (49155, 2048), rules=rules, is_param=True)
+    assert spec == P(None, "model")
+
+
+def test_vocab_divisible_sharded(rules):
+    spec = spec_for(("vocab", "embed"), (152064, 8192), rules=rules, is_param=True)
+    assert spec == P("model", "data")
+
+
+def test_kv_heads_too_small_falls_to_embed(rules):
+    # wk (embed, kv_heads=8, head_dim): kv_heads (8 < 16) is never sharded;
+    # the model axis falls back to the contraction dim (partial-sum
+    # all-reduce on a small kv output — preferable to replicated compute).
+    spec = spec_for(("embed", "kv_heads", "head_dim"), (8192, 8, 128),
+                    rules=rules, is_param=True)
+    assert spec == P("model", None, None)
+
+
+def test_q_heads_sharded(rules):
+    spec = spec_for(("embed", "heads", "head_dim"), (8192, 64, 128),
+                    rules=rules, is_param=True)
+    assert spec == P("data", "model", None)
+
+
+def test_activation_uneven_heads_allowed(rules):
+    # 24 heads over 16: activations tolerate uneven sharding
+    spec = spec_for(("batch", "seq", "heads", "head_dim"), (256, 4096, 24, 128),
+                    rules=rules, is_param=False)
+    assert spec == P("data", None, "model", None)
+
+
+def test_small_batch_stays_replicated(rules):
+    # long_500k: global_batch=1 cannot shard over 16
+    spec = spec_for(("batch", "cache_seq", "kv_heads", "head_dim"),
+                    (1, 524288, 8, 128), rules=rules, is_param=False)
+    assert spec == P(None, "model", None, None)
+
+
+def test_moe_expert_weights(rules):
+    # dbrx w1 (experts=16, embed, ffn): model on ffn (TP-MoE), fsdp on embed
+    spec = spec_for(("experts", "embed", "ffn"), (16, 6144, 10752),
+                    rules=rules, is_param=True)
+    assert spec == P(None, "data", "model")
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(
+        st.sampled_from(["embed", "ffn", "heads", "vocab", "batch", None, "seq"]),
+        min_size=1, max_size=4,
+    ),
+    st.lists(st.integers(1, 4096), min_size=4, max_size=4),
+    st.booleans(),
+)
+def test_spec_always_valid(rules, rules_names, dims, is_param):
+    names = tuple(rules_names)
+    shape = tuple(dims[: len(names)])
+    spec = spec_for(names, shape, rules=rules, is_param=is_param)
+    assert len(spec) == len(names)
+    # params: any sharded dim divides exactly
+    if is_param:
+        for dim, s in zip(shape, spec):
+            if s == "model":
+                assert dim % 16 == 0
+            if s == "data" or s == ("data",):
+                assert dim % 16 == 0
+    # no axis used twice
+    flat = []
+    for s in spec:
+        if s is None:
+            continue
+        flat.extend(s if isinstance(s, tuple) else (s,))
+    assert len(flat) == len(set(flat))

@@ -1,0 +1,106 @@
+"""Timing-model properties (hypothesis) + error/speedup formula checks."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sim.hardware import P1, P2, P3
+from repro.sim.simulate import SamplingPlan, sampling_error, speedup
+from repro.sim.timing import simulate_kernel
+from repro.tracing.templates import make_kernel
+
+
+def _stats(n=1 << 22, **kw):
+    k = make_kernel("k", "elementwise", {"n": n, **kw}, 0, 0)
+    return k.stats("P1")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(18, 26))
+def test_more_work_never_faster(log_n):
+    s1 = _stats(1 << log_n)
+    s2 = _stats(1 << (log_n + 1))
+    m1 = simulate_kernel(s1, P1)
+    m2 = simulate_kernel(s2, P1)
+    assert m2.cycles >= m1.cycles
+
+
+def test_metrics_in_range():
+    for tmpl, params in [
+        ("gemm", {"M": 1024, "N": 1024, "K": 1024}),
+        ("traversal", {"nodes": 1 << 20, "degree": 8}),
+        ("softmax", {"rows": 4096, "cols": 1024}),
+    ]:
+        st_ = make_kernel("k", tmpl, params, 0, 0).stats("P1")
+        for hw in (P1, P2, P3):
+            m = simulate_kernel(st_, hw)
+            assert 0 <= m.l1_hit <= 1 and 0 <= m.l2_hit <= 1
+            assert 0 < m.occupancy <= 1
+            assert m.cycles > 0 and m.ipc > 0
+
+
+def test_newer_hardware_not_slower():
+    """P3 (Ada) >= P1 (Turing) on throughput workloads."""
+    for tmpl, params in [
+        ("gemm", {"M": 2048, "N": 2048, "K": 2048}),
+        ("elementwise", {"n": 1 << 24}),
+    ]:
+        st_ = make_kernel("k", tmpl, params, 0, 0).stats
+        t1 = simulate_kernel(st_("P1"), P1).time_s
+        t3 = simulate_kernel(st_("P3"), P3).time_s
+        assert t3 <= t1 * 1.05
+
+
+def test_bigger_l2_higher_hit():
+    # P2 and P3 share the L1 size, isolating the L2-capacity effect;
+    # working set (~80MB) sits between the two L2 sizes (6MB / 72MB)
+    st_ = make_kernel("k", "stencil",
+                      {"nx": 16384, "ny": 1024, "pts": 5, "reuse": 4.0},
+                      0, 0).stats("P2")
+    m2 = simulate_kernel(st_, P2)  # 6MB L2
+    m3 = simulate_kernel(st_, P3)  # 72MB L2
+    assert m3.l2_hit >= m2.l2_hit
+
+
+def test_error_formula():
+    """eq.5: perfect plan -> 0; representative = half cycles -> 50%."""
+
+    class M:
+        def __init__(self, c):
+            self.cycles = c
+            self.time_s = c
+            self.ipc = self.l1_hit = self.l2_hit = self.occupancy = 0.5
+
+    metrics = [M(100.0), M(300.0)]
+    plan = SamplingPlan(labels=np.array([0, 0]), reps={0: [0]})
+    assert sampling_error(plan, metrics) == pytest.approx(50.0)
+    plan2 = SamplingPlan(labels=np.array([0, 1]), reps={0: [0], 1: [1]})
+    assert sampling_error(plan2, metrics) == pytest.approx(0.0)
+
+
+def test_speedup_formula():
+    class M:
+        def __init__(self, t):
+            self.time_s = t
+            self.cycles = t
+
+    metrics = [M(1.0)] * 10
+    plan = SamplingPlan(labels=np.zeros(10, int), reps={0: [0]})
+    assert speedup(plan, metrics) == pytest.approx(10.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 30), st.integers(0, 100))
+def test_multi_rep_reconstruction_bounded(n, seed):
+    """Reconstruction with all kernels as reps of one cluster == exact mean."""
+    rng = np.random.default_rng(seed)
+
+    class M:
+        def __init__(self, c):
+            self.cycles = float(c)
+            self.time_s = float(c)
+            self.ipc = self.l1_hit = self.l2_hit = self.occupancy = 0.5
+
+    metrics = [M(c) for c in rng.uniform(1, 100, n)]
+    plan = SamplingPlan(labels=np.zeros(n, int), reps={0: list(range(n))})
+    assert sampling_error(plan, metrics) < 1e-9

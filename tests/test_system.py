@@ -1,0 +1,87 @@
+"""End-to-end behaviour tests for the paper's system: trace -> HRG -> RGCN
+contrastive training -> clustering -> sampled simulation, against ground
+truth, plus the three baselines on the paper's crafted failure modes."""
+
+import numpy as np
+import pytest
+
+from repro.core.sampler import GCLSampler, GCLSamplerConfig
+from repro.core.train import GCLTrainConfig
+from repro.core.baselines import pka_plan, sieve_plan, stem_root_plan
+from repro.sim.simulate import (
+    full_metrics, reconstruct, sampling_error, simulate_program, speedup,
+)
+from repro.tracing.programs import get_program
+
+
+def _fast_sampler():
+    return GCLSampler(GCLSamplerConfig(
+        cap_instr=64, train=GCLTrainConfig(steps=30, batch_size=8),
+    ))
+
+
+@pytest.fixture(scope="module")
+def nw_results():
+    prog = get_program("nw")
+    metrics = simulate_program(prog, "P1")
+    plan = _fast_sampler().fit(prog)
+    return prog, metrics, plan
+
+
+def test_gcl_nw_two_clusters(nw_results):
+    """Paper §5.1: nw has 255 distinct names but 2 behavior groups."""
+    _, metrics, plan = nw_results
+    assert plan.num_clusters == 2
+    assert sampling_error(plan, metrics) < 1.0
+    assert speedup(plan, metrics) > 100.0
+
+
+def test_gcl_nw_beats_name_based(nw_results):
+    prog, metrics, _ = nw_results
+    sv = sieve_plan(prog)
+    st = stem_root_plan(prog)
+    assert speedup(sv, metrics) < 1.5  # names distinct -> no reduction
+    assert speedup(st, metrics) < 1.5
+
+
+def test_pka_merges_nw_groups(nw_results):
+    """PKA's features are identical across the two nw groups."""
+    prog, metrics, _ = nw_results
+    pk = pka_plan(prog)
+    assert sampling_error(pk, metrics) > 5.0
+
+
+def test_backprop_no_reduction():
+    """backprop: 2 behaviorally-different kernels; GCL keeps both (1x
+    speedup, ~0 error); PKA merges them (large error)."""
+    prog = get_program("backprop")
+    metrics = simulate_program(prog, "P1")
+    plan = _fast_sampler().fit(prog)
+    assert plan.num_clusters == 2
+    assert sampling_error(plan, metrics) < 0.5
+    pk = pka_plan(prog)
+    assert sampling_error(pk, metrics) > 20.0
+
+
+def test_reconstruction_exact_when_full():
+    """A plan with every kernel as its own cluster reconstructs exactly."""
+    prog = get_program("3mm")
+    metrics = simulate_program(prog, "P1")
+    n = len(prog)
+    from repro.sim.simulate import SamplingPlan
+
+    plan = SamplingPlan(
+        labels=np.arange(n), reps={i: [i] for i in range(n)}, method="id"
+    )
+    assert sampling_error(plan, metrics) < 1e-9
+    assert abs(speedup(plan, metrics) - 1.0) < 1e-9
+
+
+def test_weighted_metric_reconstruction():
+    prog = get_program("3mm")
+    metrics = simulate_program(prog, "P1")
+    plan = _fast_sampler().fit(prog)
+    full = full_metrics(metrics)
+    est = reconstruct(plan, metrics)
+    for name in ("cycles", "ipc", "l1_hit", "l2_hit", "occupancy"):
+        assert est[name] == pytest.approx(full[name], rel=0.2), name
