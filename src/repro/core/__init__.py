@@ -1,6 +1,7 @@
 """The paper's primary contribution: GCL-Sampler.
 
 graphs       SASS trace -> Heterogeneous Relational Graph (HRG)
+batching     packed, bucketed graph batching (flat segment arrays)
 augment      contrastive views (node drop / edge drop / feature noise)
 rgcn         RGCN encoder + projection head (features built in-model)
 contrastive  symmetric InfoNCE
@@ -10,5 +11,9 @@ sampler      end-to-end GCL-Sampler pipeline
 baselines    PKA / Sieve / STEM+ROOT
 """
 
+from repro.core.batching import (
+    bucket_key, bucket_size, graph_content_hash, pack_graphs,
+    plan_microbatches,
+)
 from repro.core.graphs import KernelGraph, build_kernel_graph, pad_batch
 from repro.core.sampler import GCLSampler, GCLSamplerConfig

@@ -49,3 +49,40 @@ def apply_feature_noise(rng, h, use_noise, sigma):
     """Per-graph gated Gaussian feature noise (B,) gate."""
     noise = sigma * jax.random.normal(rng, h.shape)
     return h + noise * use_noise[:, None, None]
+
+
+# ---------------------------------------------------------------------------
+# Packed-batch variants (core/batching.py layout): per-graph strategy flags
+# are gathered onto the flat node/edge axes via graph_id / edge_graph.
+# ---------------------------------------------------------------------------
+
+
+def augment_view_packed(rng, batch):
+    """Returns (aug_batch, use_noise (G,) float mask) for a packed batch."""
+    P = batch["node_mask"].shape[0]
+    Q = batch["edge_mask"].shape[0]
+    G = batch["graph_mask"].shape[0]
+    r_combo, r_node, r_edge = jax.random.split(rng, 3)
+    combo = jax.random.randint(r_combo, (G,), 0, _COMBOS.shape[0])
+    flags = _COMBOS[combo]  # (G,3) node/edge/noise
+
+    node_keep = jax.random.bernoulli(r_node, 1 - NODE_DROP_RATE, (P,))
+    node_keep = jnp.where(flags[batch["graph_id"], 0] > 0, node_keep, True)
+    edge_keep = jax.random.bernoulli(r_edge, 1 - EDGE_DROP_RATE, (Q,))
+    edge_keep = jnp.where(flags[batch["edge_graph"], 1] > 0, edge_keep, True)
+
+    node_mask = batch["node_mask"] * node_keep
+    src_keep = jnp.take(node_mask, batch["edge_src"])
+    dst_keep = jnp.take(node_mask, batch["edge_dst"])
+    edge_mask = batch["edge_mask"] * edge_keep * src_keep * dst_keep
+
+    out = dict(batch)
+    out["node_mask"] = node_mask
+    out["edge_mask"] = edge_mask
+    return out, flags[:, 2]
+
+
+def apply_feature_noise_packed(rng, h, use_noise, graph_id, sigma):
+    """Per-graph gated Gaussian feature noise on flat (P, D) features."""
+    noise = sigma * jax.random.normal(rng, h.shape)
+    return h + noise * jnp.take(use_noise, graph_id)[:, None]

@@ -1,0 +1,246 @@
+"""Packed, bucketed graph batching (jraph-style) for the RGCN stack.
+
+Dense `pad_batch` pads every graph in a batch to the batch-wide max
+nodes/edges/warps, so one large kernel inflates the cost of every small one
+and every new (N, E, W) combination triggers a fresh jit compile.  The packed
+representation concatenates all graphs of a batch into ONE flat node array
+and ONE flat edge array:
+
+  node axis (P,): node_type / token / pc_norm / vstats / node_mask
+                  graph_id  — segment id of the owning graph
+                  warp_seg  — GLOBAL warp segment id (graph-offset warp ids)
+  edge axis (Q,): edge_src / edge_dst (node-offset-shifted into the flat
+                  node axis, sorted by edge_dst for the blocked SpMM kernel),
+                  edge_type / edge_mask / edge_graph
+  warp axis (W,): warp_graph — graph id per warp segment (warp validity
+                  is derived in the readout from per-warp node counts)
+  graph axis (G,): graph_mask, trunc_nodes / trunc_edges accounting
+
+Each axis is padded up to a small set of size BUCKETS (powers of two above a
+floor), so the number of distinct jit-compiled shapes is bounded by the
+bucket count instead of the dataset's shape diversity.  Padding rows carry
+mask 0 and index 0; every consumer is masked, so segment-sums over padding
+contribute nothing.
+
+`unpack` is index bookkeeping only: graph g owns rows [node_off[g],
+node_off[g] + n_nodes[g]) of the flat node axis, and row g of any per-graph
+output (e.g. the (G, 256) kernel embeddings).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.graphs import KernelGraph
+
+# Bucket floors: the smallest padded size per axis.  Everything above the
+# floor rounds up to the next power of two, so #buckets per axis is
+# log2(max/floor) + 1.
+NODE_FLOOR = 256
+EDGE_FLOOR = 512
+WARP_FLOOR = 4
+
+# Default micro-batch budgets for the streaming embed path.  MAX_NODES also
+# bounds the flat Pallas kernel's VMEM residency: h (P, 128) f32 + the
+# (P, nb*128) accumulator must fit on-chip (P = 4096 -> ~6 MB).
+MAX_NODES_PER_MICROBATCH = 4096
+MAX_EDGES_PER_MICROBATCH = 8192
+MAX_GRAPHS_PER_MICROBATCH = 64
+
+
+def bucket_size(n: int, floor: int) -> int:
+    """Round n up to the next power-of-two bucket >= floor."""
+    b = int(floor)
+    while b < n:
+        b *= 2
+    return b
+
+
+def bucket_key(batch) -> tuple[int, int, int, int]:
+    """(P, Q, W, G) static shape key — jit retraces are bounded by the
+    number of distinct keys."""
+    return (
+        batch["node_mask"].shape[0],
+        batch["edge_mask"].shape[0],
+        batch["warp_graph"].shape[0],
+        batch["graph_mask"].shape[0],
+    )
+
+
+@dataclass(frozen=True)
+class PackMeta:
+    """Host-side bookkeeping to unpack per-graph results.
+
+    node_off/warp_off slice the flat node/warp axes per graph.  The flat
+    EDGE arrays are dst-sorted across the whole batch, so graph g's edges
+    are NOT contiguous — select them with `batch['edge_graph'] == g`;
+    `edge_off` only gives per-graph edge COUNTS (edge_off[g+1]-edge_off[g]).
+    """
+    n_graphs: int
+    node_off: np.ndarray   # (G+1,) node offsets into the flat axis
+    edge_off: np.ndarray   # (G+1,) cumulative per-graph edge counts (pre-sort)
+    warp_off: np.ndarray   # (G+1,)
+    trunc_nodes: np.ndarray  # (G,) nodes dropped by per-graph caps
+    trunc_edges: np.ndarray  # (G,)
+
+
+def pack_graphs(
+    graphs: list[KernelGraph],
+    *,
+    bucket: bool = True,
+    pad_graphs_to: int | None = None,
+    max_nodes_per_graph: int | None = None,
+    max_edges_per_graph: int | None = None,
+):
+    """Pack a list of KernelGraphs into one flat (numpy) batch.
+
+    Returns (batch dict, PackMeta).  With `bucket`, the node/edge/warp axes
+    are padded to power-of-two buckets; the graph axis is left exact unless
+    `pad_graphs_to` is given (training keeps G == batch_size so the InfoNCE
+    logits never see padding graphs; embed pads G per micro-batch bucket).
+    """
+    G = len(graphs)
+    assert G > 0, "pack_graphs needs at least one graph"
+
+    n_nodes = np.empty(G, np.int64)
+    n_edges = np.empty(G, np.int64)
+    n_warps = np.empty(G, np.int64)
+    trunc_n = np.zeros(G, np.int64)
+    trunc_e = np.zeros(G, np.int64)
+    parts = []
+    for gi, g in enumerate(graphs):
+        n, e = g.n_nodes, g.n_edges
+        if max_nodes_per_graph is not None and n > max_nodes_per_graph:
+            trunc_n[gi] = n - max_nodes_per_graph
+            n = max_nodes_per_graph
+        src, dst, et = g.edge_src, g.edge_dst, g.edge_type
+        if n < g.n_nodes:  # drop edges touching truncated nodes
+            keep = (src < n) & (dst < n)
+            src, dst, et = src[keep], dst[keep], et[keep]
+            trunc_e[gi] += g.n_edges - len(src)
+            e = len(src)
+        if max_edges_per_graph is not None and e > max_edges_per_graph:
+            trunc_e[gi] += e - max_edges_per_graph
+            src = src[:max_edges_per_graph]
+            dst = dst[:max_edges_per_graph]
+            et = et[:max_edges_per_graph]
+            e = max_edges_per_graph
+        n_nodes[gi], n_edges[gi], n_warps[gi] = n, e, g.n_warps
+        parts.append((n, src, dst, et))
+
+    node_off = np.concatenate([[0], np.cumsum(n_nodes)])
+    edge_off = np.concatenate([[0], np.cumsum(n_edges)])
+    warp_off = np.concatenate([[0], np.cumsum(n_warps)])
+    P_used, Q_used, W_used = int(node_off[-1]), int(edge_off[-1]), int(warp_off[-1])
+
+    if bucket:
+        P = bucket_size(P_used, NODE_FLOOR)
+        Q = bucket_size(max(Q_used, 1), EDGE_FLOOR)
+        W = bucket_size(max(W_used, 1), WARP_FLOOR)
+    else:
+        P, Q, W = P_used, max(Q_used, 1), max(W_used, 1)
+    Gp = pad_graphs_to or G
+    assert Gp >= G, (Gp, G)
+
+    batch = {
+        "node_type": np.zeros(P, np.int32),
+        "token": np.zeros(P, np.int32),
+        "pc_norm": np.zeros(P, np.float32),
+        "vstats": np.zeros((P, 8), np.float32),
+        "graph_id": np.zeros(P, np.int32),
+        "warp_seg": np.zeros(P, np.int32),
+        "node_mask": np.zeros(P, np.float32),
+        "edge_src": np.zeros(Q, np.int32),
+        "edge_dst": np.zeros(Q, np.int32),
+        "edge_type": np.zeros(Q, np.int32),
+        "edge_graph": np.zeros(Q, np.int32),
+        "edge_mask": np.zeros(Q, np.float32),
+        "warp_graph": np.zeros(W, np.int32),
+        "graph_mask": np.zeros(Gp, np.float32),
+        "trunc_nodes": np.zeros(Gp, np.int32),
+        "trunc_edges": np.zeros(Gp, np.int32),
+    }
+
+    for gi, g in enumerate(graphs):
+        n, src, dst, et = parts[gi]
+        no, eo, wo = int(node_off[gi]), int(edge_off[gi]), int(warp_off[gi])
+        sl = slice(no, no + n)
+        batch["node_type"][sl] = g.node_type[:n]
+        batch["token"][sl] = g.token[:n]
+        batch["pc_norm"][sl] = g.pc_norm[:n]
+        batch["vstats"][sl] = g.vstats[:n]
+        batch["graph_id"][sl] = gi
+        batch["warp_seg"][sl] = g.warp_id[:n].astype(np.int32) + wo
+        batch["node_mask"][sl] = 1.0
+        e = len(src)
+        el = slice(eo, eo + e)
+        batch["edge_src"][el] = src.astype(np.int32) + no
+        batch["edge_dst"][el] = dst.astype(np.int32) + no
+        batch["edge_type"][el] = et
+        batch["edge_graph"][el] = gi
+        batch["edge_mask"][el] = 1.0
+        wl = slice(wo, wo + g.n_warps)
+        batch["warp_graph"][wl] = gi
+    batch["graph_mask"][:G] = 1.0
+    batch["trunc_nodes"][:G] = trunc_n
+    batch["trunc_edges"][:G] = trunc_e
+
+    # sort the used prefix of the edge list by destination: the blocked SpMM
+    # kernel streams edge blocks whose dst indices are then near-contiguous,
+    # and the accumulation order becomes deterministic
+    order = np.argsort(batch["edge_dst"][:Q_used], kind="stable")
+    for k in ("edge_src", "edge_dst", "edge_type", "edge_graph", "edge_mask"):
+        batch[k][:Q_used] = batch[k][:Q_used][order]
+
+    meta = PackMeta(
+        n_graphs=G, node_off=node_off, edge_off=edge_off, warp_off=warp_off,
+        trunc_nodes=trunc_n, trunc_edges=trunc_e,
+    )
+    return batch, meta
+
+
+def plan_microbatches(
+    graphs: list[KernelGraph],
+    *,
+    max_nodes: int = MAX_NODES_PER_MICROBATCH,
+    max_edges: int = MAX_EDGES_PER_MICROBATCH,
+    max_graphs: int = MAX_GRAPHS_PER_MICROBATCH,
+) -> list[list[int]]:
+    """Greedy size-sorted binning of graph indices into micro-batches whose
+    packed totals respect the node/edge/graph budgets.  Sorting by size keeps
+    same-bucket graphs together, minimizing distinct bucket keys."""
+    order = sorted(
+        range(len(graphs)), key=lambda i: (graphs[i].n_nodes, graphs[i].n_edges)
+    )
+    bins: list[list[int]] = []
+    cur: list[int] = []
+    cn = ce = 0
+    for i in order:
+        g = graphs[i]
+        gn = min(g.n_nodes, max_nodes)
+        ge = min(g.n_edges, max_edges)
+        if cur and (cn + gn > max_nodes or ce + ge > max_edges
+                    or len(cur) >= max_graphs):
+            bins.append(cur)
+            cur, cn, ce = [], 0, 0
+        cur.append(i)
+        cn += gn
+        ce += ge
+    if cur:
+        bins.append(cur)
+    return bins
+
+
+def graph_content_hash(g: KernelGraph) -> str:
+    """Content hash of a kernel graph — identical repeated invocations hash
+    equal, so the embedding cache encodes each distinct kernel once."""
+    h = hashlib.blake2b(digest_size=16)
+    for a in (g.node_type, g.token, g.pc_norm, g.vstats, g.warp_id,
+              g.edge_src, g.edge_dst, g.edge_type):
+        h.update(np.ascontiguousarray(a).tobytes())
+        h.update(str(a.shape).encode())
+    h.update(str(g.n_warps).encode())
+    return h.hexdigest()

@@ -231,7 +231,14 @@ def build_kernel_graph(traces: list[WarpTrace]) -> KernelGraph:
 
 def pad_batch(graphs: list[KernelGraph], max_nodes=None, max_edges=None,
               max_warps=None):
-    """Pad a list of KernelGraphs into dense batch arrays (jit-ready)."""
+    """Pad a list of KernelGraphs into dense batch arrays (jit-ready).
+
+    Compatibility shim — new code should use the packed representation in
+    core/batching.py, which avoids padding every graph to the batch-wide max.
+    When `max_nodes`/`max_edges` caps drop nodes or edges, the per-graph
+    counts are surfaced in `trunc_nodes`/`trunc_edges` (B,) and a warning is
+    emitted, so sampler fidelity loss is observable instead of silent.
+    """
     B = len(graphs)
     N = max_nodes or max(g.n_nodes for g in graphs)
     E = max_edges or max(max(g.n_edges for g in graphs), 1)
@@ -248,6 +255,8 @@ def pad_batch(graphs: list[KernelGraph], max_nodes=None, max_edges=None,
         "edge_type": np.zeros((B, E), np.int32),
         "edge_mask": np.zeros((B, E), np.float32),
         "n_warps": np.zeros((B,), np.int32),
+        "trunc_nodes": np.zeros((B,), np.int32),
+        "trunc_edges": np.zeros((B,), np.int32),
     }
     for b, g in enumerate(graphs):
         n = min(g.n_nodes, N)
@@ -264,4 +273,16 @@ def pad_batch(graphs: list[KernelGraph], max_nodes=None, max_edges=None,
         out["edge_type"][b, :e] = np.where(keep, g.edge_type[:e], 0)
         out["edge_mask"][b, :e] = keep.astype(np.float32)
         out["n_warps"][b] = g.n_warps
+        out["trunc_nodes"][b] = g.n_nodes - n
+        out["trunc_edges"][b] = g.n_edges - e + int(e - keep.sum())
+    if out["trunc_nodes"].any() or out["trunc_edges"].any():
+        import warnings
+
+        warnings.warn(
+            f"pad_batch truncated {int(out['trunc_nodes'].sum())} nodes / "
+            f"{int(out['trunc_edges'].sum())} edges across "
+            f"{int(((out['trunc_nodes'] > 0) | (out['trunc_edges'] > 0)).sum())}"
+            f" graph(s); counts are in batch['trunc_nodes'/'trunc_edges']",
+            stacklevel=2,
+        )
     return out, W

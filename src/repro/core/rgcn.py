@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graphs import NUM_RELATIONS
+from repro.distributed.sharding import constrain
 from repro.tracing.isa import NUM_OPCODES, PSEUDO_KINDS, VAR_KINDS
 
 
@@ -115,6 +116,22 @@ def node_features(p, rc: RGCNConfig, batch, noise_rng=None):
     return h * batch["node_mask"][..., None]
 
 
+def _layer_epilogue(lp, rc: RGCNConfig, agg, h, node_mask, *, last, rng,
+                    train):
+    """Self-loop + LayerNorm + ReLU + dropout + node-mask, shared by the
+    dense and packed layers (rank-agnostic) so the two paths cannot
+    silently diverge."""
+    out = agg + h @ lp["w0"] + lp["b"]
+    mu = out.mean(-1, keepdims=True)
+    sig = out.var(-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(sig + 1e-5) * lp["ln_scale"] + lp["ln_bias"]
+    out = jax.nn.relu(out)
+    if not last and train and rng is not None and rc.dropout > 0:
+        keep = jax.random.bernoulli(rng, 1 - rc.dropout, out.shape)
+        out = out * keep / (1 - rc.dropout)
+    return out * node_mask[..., None]
+
+
 def _rgcn_layer(lp, rc: RGCNConfig, h, batch, *, last, rng=None, train=False):
     B, N, _ = h.shape
     E = batch["edge_src"].shape[1]
@@ -157,16 +174,8 @@ def _rgcn_layer(lp, rc: RGCNConfig, h, batch, *, last, rng=None, train=False):
         agg = jnp.einsum("bnkd,kdo->bno", s, lp["basis"].astype(mdt),
                          preferred_element_type=jnp.float32)
 
-    out = agg + h @ lp["w0"] + lp["b"]
-    # LayerNorm
-    mu = out.mean(-1, keepdims=True)
-    sig = out.var(-1, keepdims=True)
-    out = (out - mu) * jax.lax.rsqrt(sig + 1e-5) * lp["ln_scale"] + lp["ln_bias"]
-    out = jax.nn.relu(out)
-    if not last and train and rng is not None and rc.dropout > 0:
-        keep = jax.random.bernoulli(rng, 1 - rc.dropout, out.shape)
-        out = out * keep / (1 - rc.dropout)
-    return out * batch["node_mask"][..., None]
+    return _layer_epilogue(lp, rc, agg, h, batch["node_mask"], last=last,
+                           rng=rng, train=train)
 
 
 def encode(p, rc: RGCNConfig, batch, max_warps: int, *, rng=None, train=False,
@@ -203,6 +212,90 @@ def encode(p, rc: RGCNConfig, batch, max_warps: int, *, rng=None, train=False,
         jnp.sum(valid, axis=1, keepdims=True), 1.0
     )
     return zk
+
+
+# ---------------------------------------------------------------------------
+# Packed (flat segment-batched) path — see core/batching.py for the layout.
+# Node features reuse `node_features` (it is rank-agnostic); message passing
+# replaces the per-graph vmap + segment_sum pairs with single global
+# segment-sums over the flat axes, and the readout is a two-level
+# warp-segment -> graph-segment mean.
+# ---------------------------------------------------------------------------
+
+
+def _rgcn_layer_packed(lp, rc: RGCNConfig, h, batch, *, last, rng=None,
+                       train=False):
+    P, _ = h.shape
+    R = rc.num_relations
+    src, dst, etype = batch["edge_src"], batch["edge_dst"], batch["edge_type"]
+    emask = batch["edge_mask"]
+    if tuple(rc.relations_used) != (0, 1, 2, 3):
+        keep = jnp.isin(etype, jnp.asarray(rc.relations_used))
+        emask = emask * keep
+
+    # per-(dst, relation) in-degree for normalization 1/|N_r(v)|
+    key = dst * R + etype
+    deg = jax.ops.segment_sum(emask, key, num_segments=P * R)
+    norm = 1.0 / jnp.maximum(jnp.take(deg, key), 1.0)
+
+    coef = jnp.take(lp["comb"], etype, axis=0)          # (Q,nb)
+    w = coef * (emask * norm)[:, None]                  # (Q,nb)
+    if rc.use_pallas:
+        from repro.kernels.rgcn_spmm.ops import rgcn_message_agg_flat
+
+        agg = rgcn_message_agg_flat(
+            h, lp["basis"], src, dst, w, P, True,
+        )
+    else:
+        mdt = jnp.dtype(rc.message_dtype)
+        h_src = jnp.take(h.astype(mdt), src, axis=0)    # (Q,D)
+        weighted = h_src[:, None, :] * w[..., None].astype(mdt)  # (Q,nb,D)
+        s = jax.ops.segment_sum(weighted, dst, num_segments=P)   # (P,nb,D)
+        agg = jnp.einsum("nkd,kdo->no", s, lp["basis"].astype(mdt),
+                         preferred_element_type=jnp.float32)
+
+    out = _layer_epilogue(lp, rc, agg, h, batch["node_mask"], last=last,
+                          rng=rng, train=train)
+    # data-parallel sharding over the packed node axis (bucket sizes are
+    # powers of two, so the axis divides evenly); no-op without mesh rules
+    return constrain(out, "batch", "embed")
+
+
+def encode_packed(p, rc: RGCNConfig, batch, *, rng=None, train=False,
+                  noise_gate=None):
+    """Packed batch -> kernel embeddings z_k (G, dims[-1]).  Static sizes
+    come from the batch arrays; noise_gate is a per-graph (G,) gate.
+    Padding graphs (graph_mask == 0) produce zero rows."""
+    if rng is not None:
+        rngs = jax.random.split(rng, len(rc.dims))
+    else:
+        rngs = [None] * len(rc.dims)
+    h = node_features(p, rc, batch)                     # (P, 64)
+    if noise_gate is not None and rngs[-1] is not None:
+        from repro.core.augment import apply_feature_noise_packed
+
+        h = apply_feature_noise_packed(
+            rngs[-1], h, noise_gate, batch["graph_id"], rc.feat_noise_sigma
+        )
+        h = h * batch["node_mask"][:, None]
+    for li, lp in enumerate(p["layers"]):
+        h = _rgcn_layer_packed(
+            lp, rc, h, batch, last=(li == len(p["layers"]) - 1),
+            rng=rngs[li], train=train,
+        )
+    # two-level readout: node -> warp segment mean, warp -> graph mean
+    wseg, nmask = batch["warp_seg"], batch["node_mask"]
+    W = batch["warp_graph"].shape[0]
+    G = batch["graph_mask"].shape[0]
+    wsum = jax.ops.segment_sum(h * nmask[:, None], wseg, num_segments=W)
+    wcnt = jax.ops.segment_sum(nmask, wseg, num_segments=W)
+    warp_mean = wsum / jnp.maximum(wcnt, 1.0)[:, None]
+    valid = (wcnt > 0).astype(h.dtype)                  # (W,)
+    gsum = jax.ops.segment_sum(
+        warp_mean * valid[:, None], batch["warp_graph"], num_segments=G
+    )
+    gcnt = jax.ops.segment_sum(valid, batch["warp_graph"], num_segments=G)
+    return gsum / jnp.maximum(gcnt, 1.0)[:, None]
 
 
 def project(p, rc: RGCNConfig, zk, *, rng=None, train=False):

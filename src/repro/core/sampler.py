@@ -67,6 +67,8 @@ class GCLSampler:
         return info
 
     def embed(self, graphs: list[KernelGraph]) -> np.ndarray:
+        """Streaming packed-bucketed embed with a content-hash cache:
+        repeated kernel invocations are encoded once (see trainer.embed)."""
         assert self.params is not None, "call train() first"
         return self.trainer.embed(self.params, graphs)
 
@@ -89,6 +91,7 @@ class GCLSampler:
         plan = self.cluster(emb, seqs)
         plan.extra.update(
             train=train_info,
+            embed=dict(self.trainer.embed_stats),
             timings={
                 "graphs_s": t1 - t0, "train_s": t2 - t1,
                 "embed_s": t3 - t2, "cluster_s": time.time() - t3,

@@ -3,13 +3,21 @@
 Training config mirrors the paper: AdamW, lr 7e-4 with cosine annealing,
 temperature tau=0.05, 80/20 train/validation split of the program's kernels.
 
-Distribution: batches shard over the mesh's batch axes; the InfoNCE logits
-matrix z1 @ z2^T makes GSPMD all-gather the projected embeddings — global
-negatives across data shards (SimCLR-at-scale adaptation, DESIGN.md §3).
+Batching: graphs are PACKED (core/batching.py) — one flat node/edge array per
+batch with segment ids, padded to power-of-two size buckets, so jit
+recompilation is bounded by the bucket count and no kernel pays for the
+batch-wide max size.  The dense `pad_batch` path is kept as `embed_dense`
+for parity tests and the batching benchmark baseline.
+
+Distribution: batches shard over the mesh's batch axes (the packed node axis
+carries the 'batch' logical name); the InfoNCE logits matrix z1 @ z2^T makes
+GSPMD all-gather the projected embeddings — global negatives across data
+shards (SimCLR-at-scale adaptation, DESIGN.md §3).
 """
 
 from __future__ import annotations
 
+import hashlib
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -20,11 +28,15 @@ import numpy as np
 
 from repro.config import TrainConfig
 from repro.core import rgcn as rgcn_mod
-from repro.core.augment import augment_view
+from repro.core.augment import augment_view, augment_view_packed
+from repro.core.batching import (
+    MAX_EDGES_PER_MICROBATCH, MAX_NODES_PER_MICROBATCH, bucket_key,
+    bucket_size, graph_content_hash, pack_graphs, plan_microbatches,
+)
 from repro.core.contrastive import info_nce
 from repro.core.graphs import KernelGraph, pad_batch
 from repro.core.rgcn import RGCNConfig
-from repro.distributed.sharding import MeshRules, constrain, set_mesh_rules
+from repro.distributed.sharding import MeshRules, set_mesh_rules
 from repro.optim import TrainState, adamw_init, apply_gradients
 
 
@@ -51,10 +63,16 @@ class ContrastiveTrainer:
         self.tc = tc
         self.mesh_rules = mesh_rules
         self._step_fn = None
-        self._embed_fn = None
+        self._embed_fn = None          # packed jit'd encode
+        self._embed_fn_dense = None    # dense-path jit cache (per max_warps)
+        self._embed_cache: dict[str, np.ndarray] = {}
+        self._embed_cache_fp: Optional[str] = None
+        self.embed_cache_max = 65536  # FIFO-evicted above this many entries
+        self.embed_stats: dict = {}
 
     # -- loss ---------------------------------------------------------------
     def _loss(self, params, batch, max_warps, rng):
+        """Dense-batch InfoNCE (kept for parity tests / benchmarks)."""
         r1, r2, rp1, rp2 = jax.random.split(rng, 4)
         v1, noise1 = augment_view(r1, batch)
         v2, noise2 = augment_view(r2, batch)
@@ -66,12 +84,26 @@ class ContrastiveTrainer:
         p2 = rgcn_mod.project(params, self.rc, z2, rng=rp2, train=True)
         return info_nce(p1, p2, self.tc.tau)
 
-    def _make_step(self, max_warps):
+    def _loss_packed(self, params, batch, rng):
+        """Packed-batch InfoNCE.  The graph axis is exact (G == batch size),
+        so the logits matrix never sees padding graphs."""
+        r1, r2, rp1, rp2 = jax.random.split(rng, 4)
+        v1, noise1 = augment_view_packed(r1, batch)
+        v2, noise2 = augment_view_packed(r2, batch)
+        z1 = rgcn_mod.encode_packed(params, self.rc, v1, rng=r1,
+                                    train=True, noise_gate=noise1)
+        z2 = rgcn_mod.encode_packed(params, self.rc, v2, rng=r2,
+                                    train=True, noise_gate=noise2)
+        p1 = rgcn_mod.project(params, self.rc, z1, rng=rp1, train=True)
+        p2 = rgcn_mod.project(params, self.rc, z2, rng=rp2, train=True)
+        return info_nce(p1, p2, self.tc.tau)
+
+    def _make_step(self):
         tc = self.tc
 
         def step(state: TrainState, batch, rng):
             (loss, metrics), grads = jax.value_and_grad(
-                lambda p: self._loss(p, batch, max_warps, rng), has_aux=True
+                lambda p: self._loss_packed(p, batch, rng), has_aux=True
             )(state.params)
             state, opt_metrics = apply_gradients(state, grads, tc.opt)
             metrics = dict(metrics, loss=loss, **opt_metrics)
@@ -82,6 +114,7 @@ class ContrastiveTrainer:
     # -- data ---------------------------------------------------------------
     @staticmethod
     def prepad(graphs: list[KernelGraph], pad_to=None):
+        """Dense-batch compatibility shim (see core/graphs.pad_batch)."""
         batch, max_warps = pad_batch(graphs, *(pad_to or (None, None, None)))
         return batch, max_warps
 
@@ -96,16 +129,23 @@ class ContrastiveTrainer:
         train_idx = perm[n_val:] if n_val else perm
         val_idx = perm[:n_val]
 
-        full, max_warps = self.prepad(graphs)
-        full = {k: np.asarray(v) for k, v in full.items()}
-
         key = jax.random.PRNGKey(tc.seed)
         key, k_init = jax.random.split(key)
         params = rgcn_mod.init_rgcn(k_init, rc)
         state = adamw_init(params, tc.opt)
-        step_fn = self._make_step(max_warps)
+        step_fn = self._make_step()
 
         history = []
+        bucket_keys = set()
+        trunc_nodes = 0
+        # per-graph caps bound each graph's footprint (and the bucket blowup
+        # a pathological graph would cause); with use_pallas the WHOLE batch
+        # (~batch_size * graph size) must additionally fit the flat kernel's
+        # VMEM budget — size tc.batch_size accordingly (see rgcn_spmm_flat)
+        caps = dict(
+            max_nodes_per_graph=MAX_NODES_PER_MICROBATCH,
+            max_edges_per_graph=MAX_EDGES_PER_MICROBATCH,
+        )
         bs = min(tc.batch_size, len(train_idx))
         ctx = set_mesh_rules(self.mesh_rules) if self.mesh_rules else None
         if ctx:
@@ -116,7 +156,10 @@ class ContrastiveTrainer:
                 idx = rng_np.choice(len(train_idx), size=bs,
                                     replace=len(train_idx) < bs)
                 sel = train_idx[idx]
-                batch = {k: jnp.asarray(v[sel]) for k, v in full.items()}
+                packed, meta = pack_graphs([graphs[i] for i in sel], **caps)
+                trunc_nodes += int(meta.trunc_nodes.sum())
+                bucket_keys.add(bucket_key(packed))
+                batch = {k: jnp.asarray(v) for k, v in packed.items()}
                 key, k_step = jax.random.split(key)
                 state, metrics = step_fn(state, batch, k_step)
                 if verbose and (step % tc.log_every == 0 or step == tc.steps - 1):
@@ -134,31 +177,149 @@ class ContrastiveTrainer:
         # validation InfoNCE (no dropout/noise, fixed augs)
         val = {}
         if n_val:
-            vb = {k: jnp.asarray(v[val_idx]) for k, v in full.items()}
-            loss, m = jax.jit(
-                lambda p, b, r: self._loss(p, b, max_warps, r)
-            )(state.params, vb, jax.random.PRNGKey(123))
+            packed, vmeta = pack_graphs([graphs[i] for i in val_idx], **caps)
+            trunc_nodes += int(vmeta.trunc_nodes.sum())
+            vb = {k: jnp.asarray(v) for k, v in packed.items()}
+            loss, m = jax.jit(self._loss_packed)(
+                state.params, vb, jax.random.PRNGKey(123)
+            )
             val = {"val_loss": float(loss), "val_acc": float(m["nce_acc"])}
-        return state.params, {"history": history, "max_warps": max_warps, **val}
+        if trunc_nodes:
+            import warnings
+
+            warnings.warn(
+                f"training packed {trunc_nodes} node(s) over the per-graph "
+                f"budget; graphs were truncated (see batching caps)",
+                stacklevel=2,
+            )
+        info = {
+            "history": history,
+            "bucket_keys": sorted(bucket_keys),
+            "step_compiles": _jit_cache_size(step_fn),
+            "trunc_nodes": trunc_nodes,
+            **val,
+        }
+        return state.params, info
 
     # -- inference ----------------------------------------------------------
     def embed(self, params, graphs: list[KernelGraph], batch_size=64,
-              pad_shapes=None) -> np.ndarray:
-        """256-d kernel embeddings for all graphs (paper §3.4 uses z_k,
-        not the projection head output)."""
+              max_nodes=None, max_edges=None) -> np.ndarray:
+        """256-d kernel embeddings for all graphs (paper §3.4 uses z_k, not
+        the projection head output).
+
+        Streaming micro-batched pass over size buckets with a content-hash
+        embedding cache: repeated kernel invocations (identical traces) are
+        encoded once; micro-batches are size-sorted so jit retraces stay
+        bounded by the bucket count.  Stats land in `self.embed_stats`.
+        """
+        n_cap = max_nodes or MAX_NODES_PER_MICROBATCH
+        e_cap = max_edges or MAX_EDGES_PER_MICROBATCH
+        # cache is valid only for (params, truncation caps) it was built with
+        fp = f"{_params_fingerprint(params)}:{n_cap}:{e_cap}"
+        if fp != self._embed_cache_fp:
+            self._embed_cache.clear()
+            self._embed_cache_fp = fp
+
+        n = len(graphs)
+        hashes = [graph_content_hash(g) for g in graphs]
+        todo: list[int] = []
+        scheduled: set[str] = set()
+        for i, hsh in enumerate(hashes):
+            if hsh not in self._embed_cache and hsh not in scheduled:
+                scheduled.add(hsh)
+                todo.append(i)
+        cache_hits = n - len(todo)
+
+        if self._embed_fn is None:
+            self._embed_fn = jax.jit(
+                lambda p, b: rgcn_mod.encode_packed(p, self.rc, b)
+            )
+        fn = self._embed_fn
+
+        bucket_keys = set()
+        trunc_nodes = trunc_edges = 0
+        bins = plan_microbatches(
+            [graphs[i] for i in todo],
+            max_nodes=n_cap, max_edges=e_cap, max_graphs=batch_size,
+        )
+        for bin_idx in bins:
+            sel = [todo[j] for j in bin_idx]
+            # per-graph caps: a single graph larger than the micro-batch
+            # budget is truncated (with accounting) instead of silently
+            # blowing the bucket past the Pallas kernel's VMEM budget
+            packed, meta = pack_graphs(
+                [graphs[i] for i in sel],
+                pad_graphs_to=bucket_size(len(sel), 8),
+                max_nodes_per_graph=n_cap, max_edges_per_graph=e_cap,
+            )
+            trunc_nodes += int(meta.trunc_nodes.sum())
+            trunc_edges += int(meta.trunc_edges.sum())
+            bucket_keys.add(bucket_key(packed))
+            batch = {k: jnp.asarray(v) for k, v in packed.items()}
+            z = np.asarray(fn(params, batch))
+            for k, i in enumerate(sel):
+                self._embed_cache[hashes[i]] = z[k]
+
+        if trunc_nodes or trunc_edges:
+            import warnings
+
+            warnings.warn(
+                f"embed truncated {trunc_nodes} node(s) / {trunc_edges} "
+                f"edge(s) over the micro-batch budget "
+                f"(max_nodes={n_cap}, max_edges={e_cap}); embeddings for the "
+                f"affected graphs are computed on truncated graphs",
+                stacklevel=2,
+            )
+        out = np.stack([self._embed_cache[h] for h in hashes]) if n else \
+            np.zeros((0, self.rc.dims[-1]), np.float32)
+        while len(self._embed_cache) > self.embed_cache_max:  # FIFO eviction
+            self._embed_cache.pop(next(iter(self._embed_cache)))
+        self.embed_stats = {
+            "graphs": n,
+            "cache_hits": cache_hits,
+            "encoded": len(todo),
+            "microbatches": len(bins),
+            "bucket_keys": sorted(bucket_keys),
+            "compiles": _jit_cache_size(fn),
+            "trunc_nodes": trunc_nodes,
+            "trunc_edges": trunc_edges,
+        }
+        return out
+
+    def embed_dense(self, params, graphs: list[KernelGraph], batch_size=64,
+                    pad_shapes=None) -> np.ndarray:
+        """Dense `pad_batch` embed path — the pre-packing baseline, kept for
+        parity tests and benchmarks/bench_batching.py."""
         full, max_warps = self.prepad(graphs, pad_shapes)
         full = {k: np.asarray(v) for k, v in full.items()}
         n = len(graphs)
-        if self._embed_fn is None:
-            self._embed_fn = {}
-        if max_warps not in self._embed_fn:
-            self._embed_fn[max_warps] = jax.jit(
+        if self._embed_fn_dense is None:
+            self._embed_fn_dense = {}
+        if max_warps not in self._embed_fn_dense:
+            self._embed_fn_dense[max_warps] = jax.jit(
                 lambda p, b, mw=max_warps: rgcn_mod.encode(p, self.rc, b, mw),
             )
-        fn = self._embed_fn[max_warps]
+        fn = self._embed_fn_dense[max_warps]
         outs = []
         for i in range(0, n, batch_size):
             sel = slice(i, min(i + batch_size, n))
             batch = {k: jnp.asarray(v[sel]) for k, v in full.items()}
             outs.append(np.asarray(fn(params, batch)))
         return np.concatenate(outs, axis=0)
+
+
+def _jit_cache_size(fn) -> int:
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return -1
+
+
+def _params_fingerprint(params) -> str:
+    """Cheap content fingerprint of a param pytree (embedding cache is only
+    valid for the params it was computed with).  Every leaf contributes — a
+    prefix of its bytes is enough to catch any realistic update."""
+    h = hashlib.blake2b(digest_size=8)
+    for leaf in jax.tree_util.tree_leaves(params):
+        h.update(np.asarray(leaf).tobytes()[:4096])
+    return h.hexdigest()

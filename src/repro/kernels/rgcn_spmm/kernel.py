@@ -55,6 +55,80 @@ def _rgcn_kernel(h_ref, src_ref, dst_ref, w_ref, out_ref, *, num_nodes,
     out_ref[0] += scat.astype(out_ref.dtype)
 
 
+def _rgcn_flat_kernel(h_ref, src_ref, dst_ref, w_ref, out_ref, *, num_nodes,
+                      block_e, nb):
+    ei = pl.program_id(0)
+
+    @pl.when(ei == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    h = h_ref[...]                     # (P, D)
+    src = src_ref[0]                   # (block_e,)
+    dst = dst_ref[0]
+    w = w_ref[...]                     # (block_e, nb)
+
+    iota_n = jax.lax.broadcasted_iota(jnp.int32, (block_e, num_nodes), 1)
+    onehot_src = (iota_n == src[:, None]).astype(h.dtype)   # (be, P)
+    onehot_dst = (iota_n == dst[:, None]).astype(h.dtype)   # (be, P)
+
+    gathered = jax.lax.dot_general(                         # (be, D) via MXU
+        onehot_src, h, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    D = h.shape[-1]
+    weighted = (gathered[:, None, :] * w[:, :, None]).reshape(block_e, nb * D)
+    scat = jax.lax.dot_general(                             # (P, nb*D) via MXU
+        onehot_dst.T, weighted, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] += scat.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_nodes", "block_e", "interpret")
+)
+def rgcn_spmm_flat_fwd(h, src, dst, w, *, num_nodes, block_e=256,
+                       interpret=False):
+    """Flat (packed-batch) forward: returns the pre-basis accumulator
+    s: (P, nb*D).  No batch dim — the grid streams blocks of the single flat
+    edge list (sorted by dst in core/batching.py, so each block's scatter
+    targets are near-contiguous) against the resident (P, D) node block.
+    The packed micro-batch budget (batching.MAX_NODES_PER_MICROBATCH) keeps
+    h + the accumulator within VMEM."""
+    (E,) = src.shape
+    P, D = h.shape
+    nb = w.shape[-1]
+    block_e = min(block_e, E)
+    if E % block_e != 0:  # pad edges (w=0 rows are no-ops)
+        pad = block_e - E % block_e
+        src = jnp.pad(src, (0, pad))
+        dst = jnp.pad(dst, (0, pad))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+        E = E + pad
+    ne = E // block_e
+    # TPU-friendly 2-D layout for the int32 edge-index streams
+    src2 = src.reshape(1, E)
+    dst2 = dst.reshape(1, E)
+
+    kernel = functools.partial(
+        _rgcn_flat_kernel, num_nodes=P, block_e=block_e, nb=nb
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(ne,),
+        in_specs=[
+            pl.BlockSpec((P, D), lambda e: (0, 0)),
+            pl.BlockSpec((1, block_e), lambda e: (0, e)),
+            pl.BlockSpec((1, block_e), lambda e: (0, e)),
+            pl.BlockSpec((block_e, nb), lambda e: (e, 0)),
+        ],
+        out_specs=pl.BlockSpec((P, nb * D), lambda e: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, nb * D), jnp.float32),
+        interpret=interpret,
+    )(h, src2, dst2, w)
+
+
 @functools.partial(
     jax.jit, static_argnames=("num_nodes", "block_e", "interpret")
 )

@@ -7,8 +7,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.rgcn_spmm.kernel import rgcn_spmm_fwd
-from repro.kernels.rgcn_spmm.ref import rgcn_message_agg_ref
+from repro.kernels.rgcn_spmm.kernel import rgcn_spmm_flat_fwd, rgcn_spmm_fwd
+from repro.kernels.rgcn_spmm.ref import (
+    rgcn_message_agg_flat_ref, rgcn_message_agg_ref,
+)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
@@ -39,3 +41,34 @@ def _bwd(num_nodes, interpret, res, g):
 
 
 rgcn_message_agg.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def rgcn_message_agg_flat(h, basis, src, dst, w, num_nodes: int,
+                          interpret: bool = False):
+    """Flat (packed-batch) variant: agg (P,O).  h (P,D); src/dst (Q,);
+    w (Q,nb) = comb[etype] * edge_mask * norm (see core/rgcn.py)."""
+    s = rgcn_spmm_flat_fwd(h, src, dst, w, num_nodes=num_nodes,
+                           interpret=interpret)
+    P, _ = s.shape
+    nb, D, O = basis.shape
+    return jnp.einsum("nkd,kdo->no", s.reshape(P, nb, D), basis)
+
+
+def _fwd_flat(h, basis, src, dst, w, num_nodes, interpret):
+    out = rgcn_message_agg_flat(h, basis, src, dst, w, num_nodes, interpret)
+    return out, (h, basis, src, dst, w)
+
+
+def _bwd_flat(num_nodes, interpret, res, g):
+    h, basis, src, dst, w = res
+
+    def ref_fn(h_, basis_, w_):
+        return rgcn_message_agg_flat_ref(h_, basis_, src, dst, w_, num_nodes)
+
+    _, vjp = jax.vjp(ref_fn, h, basis, w)
+    dh, dbasis, dw = vjp(g)
+    return dh, dbasis, None, None, dw
+
+
+rgcn_message_agg_flat.defvjp(_fwd_flat, _bwd_flat)

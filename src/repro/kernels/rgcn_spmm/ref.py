@@ -21,3 +21,12 @@ def rgcn_message_agg_ref(h, basis, src, dst, w, num_nodes: int):
         lambda m, d: jax.ops.segment_sum(m, d, num_segments=num_nodes)
     )(weighted, dst)                                         # (B,N,nb,D)
     return jnp.einsum("bnkd,kdo->bno", s, basis)
+
+
+def rgcn_message_agg_flat_ref(h, basis, src, dst, w, num_nodes: int):
+    """Flat (packed-batch) variant: h (P,D); src/dst (Q,); w (Q,nb) -> (P,O).
+    One global segment-sum over the flat edge list — no batch dim."""
+    h_src = jnp.take(h, src, axis=0)                         # (Q,D)
+    weighted = h_src[:, None, :] * w[..., None]              # (Q,nb,D)
+    s = jax.ops.segment_sum(weighted, dst, num_segments=num_nodes)
+    return jnp.einsum("nkd,kdo->no", s, basis)

@@ -1,0 +1,270 @@
+"""Packed, bucketed batching layer (core/batching.py): round-trip parity with
+the dense path, bucket-count bounds on recompilation, flat-SpMM kernel parity,
+truncation accounting, and packed augmentation invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rgcn as rgcn_mod
+from repro.core.augment import augment_view_packed
+from repro.core.batching import (
+    NODE_FLOOR, bucket_key, bucket_size, graph_content_hash, pack_graphs,
+    plan_microbatches,
+)
+from repro.core.graphs import build_kernel_graph, pad_batch
+from repro.core.rgcn import RGCNConfig
+from repro.core.train import ContrastiveTrainer, GCLTrainConfig
+from repro.kernels.rgcn_spmm.ops import rgcn_message_agg_flat
+from repro.kernels.rgcn_spmm.ref import rgcn_message_agg_flat_ref
+from repro.tracing.templates import make_kernel
+
+
+def _graphs(n=4, cap=48):
+    ks = [
+        make_kernel(f"k{i}", "gemm",
+                    {"M": 128 * (i + 1), "N": 128, "K": 128}, i, seed=i)
+        for i in range(n)
+    ]
+    return [build_kernel_graph(k.trace(cap_warps=2, cap_instr=cap)) for k in ks]
+
+
+def _jnp(batch):
+    return {k: jnp.asarray(v) for k, v in batch.items()}
+
+
+# ---------------------------------------------------------------------------
+# bucketing
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_size_pow2_and_monotone():
+    assert bucket_size(1, 256) == 256
+    assert bucket_size(256, 256) == 256
+    assert bucket_size(257, 256) == 512
+    assert bucket_size(5000, 256) == 8192
+    prev = 0
+    for n in range(1, 3000, 37):
+        b = bucket_size(n, 256)
+        assert b >= n and b >= prev
+        prev = b
+
+
+def test_bucket_count_bounded_by_log_range():
+    """Packing many different graph subsets must produce at most
+    log2(max/floor)+1 node buckets — not one shape per subset."""
+    graphs = _graphs(8)
+    keys = set()
+    for lo in range(8):
+        for hi in range(lo + 1, 9):
+            packed, _ = pack_graphs(graphs[lo:hi])
+            keys.add(bucket_key(packed))
+    max_nodes = sum(g.n_nodes for g in graphs)
+    n_node_buckets = int(np.log2(max(max_nodes / NODE_FLOOR, 1))) + 2
+    node_sizes = {k[0] for k in keys}
+    assert len(node_sizes) <= n_node_buckets
+    for p, q, w, g in keys:  # all axes are pow2 buckets (graph axis exact)
+        assert p & (p - 1) == 0
+        assert q & (q - 1) == 0
+        assert w & (w - 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# round trip: pack -> encode == dense per-graph encode
+# ---------------------------------------------------------------------------
+
+
+def test_packed_encode_matches_dense():
+    graphs = _graphs(4)
+    rc = RGCNConfig()
+    p = rgcn_mod.init_rgcn(jax.random.PRNGKey(0), rc)
+    dense, mw = pad_batch(graphs)
+    z_dense = np.asarray(rgcn_mod.encode(p, rc, _jnp(dense), mw))
+    packed, meta = pack_graphs(graphs)
+    z_packed = np.asarray(rgcn_mod.encode_packed(p, rc, _jnp(packed)))
+    assert z_packed.shape == z_dense.shape
+    np.testing.assert_allclose(z_packed, z_dense, atol=1e-4, rtol=1e-4)
+
+
+def test_packed_encode_invariant_to_graph_padding():
+    """Padding graph slots (graph_mask == 0) must give zero rows and leave
+    real rows untouched."""
+    graphs = _graphs(3)
+    rc = RGCNConfig()
+    p = rgcn_mod.init_rgcn(jax.random.PRNGKey(1), rc)
+    b1, _ = pack_graphs(graphs)
+    b2, _ = pack_graphs(graphs, pad_graphs_to=8)
+    z1 = np.asarray(rgcn_mod.encode_packed(p, rc, _jnp(b1)))
+    z2 = np.asarray(rgcn_mod.encode_packed(p, rc, _jnp(b2)))
+    np.testing.assert_allclose(z2[:3], z1, atol=1e-5)
+    np.testing.assert_allclose(z2[3:], 0.0, atol=1e-6)
+
+
+def test_trainer_embed_matches_dense_path():
+    graphs = _graphs(5)
+    trainer = ContrastiveTrainer(RGCNConfig(), GCLTrainConfig())
+    params = rgcn_mod.init_rgcn(jax.random.PRNGKey(2), trainer.rc)
+    z_packed = trainer.embed(params, graphs)
+    z_dense = trainer.embed_dense(params, graphs)
+    np.testing.assert_allclose(z_packed, z_dense, atol=1e-4, rtol=1e-4)
+    assert trainer.embed_stats["encoded"] == 5
+    # second call: all content-hash cache hits, no new encodes
+    z_again = trainer.embed(params, graphs)
+    np.testing.assert_allclose(z_again, z_packed, atol=0)
+    assert trainer.embed_stats["cache_hits"] == 5
+    assert trainer.embed_stats["encoded"] == 0
+
+
+def test_embed_compiles_bounded_by_buckets():
+    """Mixed-size population: jit compiles of the packed encode stay bounded
+    by the number of distinct bucket keys, not the number of micro-batches."""
+    graphs = []
+    for cap in (16, 24, 32, 48, 64):
+        graphs += _graphs(3, cap=cap)
+    trainer = ContrastiveTrainer(RGCNConfig(), GCLTrainConfig())
+    params = rgcn_mod.init_rgcn(jax.random.PRNGKey(3), trainer.rc)
+    trainer.embed(params, graphs, batch_size=4)
+    stats = trainer.embed_stats
+    assert stats["microbatches"] >= 2
+    if stats["compiles"] >= 0:  # -1 when the jit cache size API is absent
+        assert stats["compiles"] <= len(stats["bucket_keys"])
+
+
+# ---------------------------------------------------------------------------
+# flat rgcn_spmm kernel
+# ---------------------------------------------------------------------------
+
+FLAT_SHAPES = [
+    # (P, D, Q, nb, O)
+    (64, 32, 100, 2, 48),
+    (128, 64, 256, 3, 64),
+    (32, 16, 17, 2, 32),  # edge count not divisible by block
+]
+
+
+@pytest.mark.parametrize("P,D,Q,nb,O", FLAT_SHAPES)
+def test_rgcn_spmm_flat_matches_ref(P, D, Q, nb, O):
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    h = jax.random.normal(ks[0], (P, D))
+    basis = jax.random.normal(ks[1], (nb, D, O))
+    src = jax.random.randint(ks[2], (Q,), 0, P)
+    dst = jnp.sort(jax.random.randint(ks[3], (Q,), 0, P))  # dst-sorted stream
+    w = jax.random.normal(ks[4], (Q, nb))
+    out = rgcn_message_agg_flat(h, basis, src, dst, w, P, True)
+    ref = rgcn_message_agg_flat_ref(h, basis, src, dst, w, P)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rgcn_spmm_flat_grad_via_oracle():
+    P, D, Q, nb = 32, 16, 40, 2
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    h = jax.random.normal(ks[0], (P, D))
+    basis = jax.random.normal(ks[1], (nb, D, 24))
+    src = jax.random.randint(ks[2], (Q,), 0, P)
+    dst = jnp.sort(jax.random.randint(ks[3], (Q,), 0, P))
+    w = jax.random.normal(ks[4], (Q, nb))
+    g1 = jax.grad(
+        lambda h_: rgcn_message_agg_flat(h_, basis, src, dst, w, P, True).sum()
+    )(h)
+    g2 = jax.grad(
+        lambda h_: rgcn_message_agg_flat_ref(h_, basis, src, dst, w, P).sum()
+    )(h)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+def test_packed_pallas_encode_matches_jnp():
+    graphs = _graphs(3)
+    packed, _ = pack_graphs(graphs)
+    batch = _jnp(packed)
+    p = rgcn_mod.init_rgcn(jax.random.PRNGKey(6), RGCNConfig())
+    z_jnp = rgcn_mod.encode_packed(p, RGCNConfig(use_pallas=False), batch)
+    z_pls = rgcn_mod.encode_packed(p, RGCNConfig(use_pallas=True), batch)
+    np.testing.assert_allclose(np.asarray(z_jnp), np.asarray(z_pls),
+                               atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# truncation accounting + micro-batch planning + augmentation
+# ---------------------------------------------------------------------------
+
+
+def test_pad_batch_truncation_is_accounted():
+    graphs = _graphs(2)
+    n_cap = graphs[0].n_nodes // 2
+    with pytest.warns(UserWarning, match="truncated"):
+        b, _ = pad_batch(graphs, max_nodes=n_cap)
+    assert b["trunc_nodes"].sum() > 0
+    assert (b["trunc_nodes"] >= 0).all() and (b["trunc_edges"] >= 0).all()
+    total_nodes = sum(g.n_nodes for g in graphs)
+    assert b["trunc_nodes"].sum() == total_nodes - int(b["node_mask"].sum())
+
+
+def test_pack_graphs_truncation_is_accounted():
+    graphs = _graphs(2)
+    cap = graphs[0].n_nodes // 2
+    packed, meta = pack_graphs(graphs, max_nodes_per_graph=cap)
+    assert (packed["trunc_nodes"][:2] > 0).all()
+    assert meta.trunc_nodes.sum() == sum(g.n_nodes - cap for g in graphs)
+    # all surviving edges stay inside their graph's node range
+    used = packed["edge_mask"] > 0
+    src, dst = packed["edge_src"][used], packed["edge_dst"][used]
+    gid = packed["edge_graph"][used]
+    assert (src >= meta.node_off[gid]).all()
+    assert (dst < meta.node_off[gid] + np.minimum(
+        [g.n_nodes for g in graphs], cap)[gid]).all()
+
+
+def test_embed_truncates_oversized_graphs_with_accounting():
+    """A graph larger than the micro-batch budget is truncated (bounding the
+    packed bucket, and hence Pallas VMEM) and the loss is surfaced."""
+    graphs = _graphs(2)
+    trainer = ContrastiveTrainer(RGCNConfig(), GCLTrainConfig())
+    params = rgcn_mod.init_rgcn(jax.random.PRNGKey(7), trainer.rc)
+    cap = graphs[1].n_nodes // 2
+    with pytest.warns(UserWarning, match="truncated"):
+        z = trainer.embed(params, graphs, max_nodes=cap)
+    assert z.shape == (2, 256)
+    assert trainer.embed_stats["trunc_nodes"] > 0
+    for key in trainer.embed_stats["bucket_keys"]:
+        assert key[0] <= bucket_size(cap, NODE_FLOOR)
+    # different caps must not serve stale cached embeddings
+    z_full = trainer.embed(params, graphs)
+    assert trainer.embed_stats["encoded"] == 2
+    assert trainer.embed_stats["trunc_nodes"] == 0
+    assert not np.allclose(z, z_full)
+
+
+def test_plan_microbatches_respects_budgets():
+    graphs = _graphs(7)
+    bins = plan_microbatches(graphs, max_nodes=2 * max(g.n_nodes for g in graphs),
+                             max_graphs=3)
+    seen = sorted(i for b in bins for i in b)
+    assert seen == list(range(7))
+    for b in bins:
+        assert len(b) <= 3
+        assert sum(graphs[i].n_nodes for i in b) <= 2 * max(
+            g.n_nodes for g in graphs)
+
+
+def test_graph_content_hash_distinguishes():
+    g1, g2 = _graphs(2)
+    same = build_kernel_graph(
+        make_kernel("k0", "gemm", {"M": 128, "N": 128, "K": 128}, 0,
+                    seed=0).trace(2, 48)
+    )
+    assert graph_content_hash(g1) == graph_content_hash(same)
+    assert graph_content_hash(g1) != graph_content_hash(g2)
+
+
+def test_packed_augmentation_only_removes():
+    packed, _ = pack_graphs(_graphs(4))
+    batch = _jnp(packed)
+    v, noise = augment_view_packed(jax.random.PRNGKey(0), batch)
+    assert np.all(np.asarray(v["node_mask"]) <= np.asarray(batch["node_mask"]))
+    assert np.all(np.asarray(v["edge_mask"]) <= np.asarray(batch["edge_mask"]))
+    kept = np.asarray(v["node_mask"]).sum() / np.asarray(batch["node_mask"]).sum()
+    assert kept > 0.6
+    assert noise.shape == (batch["graph_mask"].shape[0],)
+    assert set(np.unique(np.asarray(noise))).issubset({0.0, 1.0})

@@ -1,6 +1,9 @@
 """Property-based tests for K-Means / silhouette / K-selection."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.clustering import (

@@ -4,6 +4,9 @@ pallas-path equivalence, augmentation behavior."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import rgcn as rgcn_mod

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for HRG construction invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graphs import NODE_INSTR, NODE_PSEUDO, NODE_VAR, build_kernel_graph

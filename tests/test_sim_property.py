@@ -2,6 +2,8 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.sim.hardware import P1, P2, P3
