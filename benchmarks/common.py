@@ -1,6 +1,7 @@
-"""Shared benchmark plumbing: fit all four methods on a program, evaluate
-error/speedup on a platform, cache GCL plans across benchmarks (training is
-the expensive step and Table 3 reuses Fig 4/5's clustering)."""
+"""Shared benchmark plumbing: fit all four methods on a program through the
+unified `repro.sampling` registry, evaluate error/speedup on a platform, and
+cache plans across benchmarks (training is the expensive step and Table 3
+reuses Fig 4/5's clustering)."""
 
 from __future__ import annotations
 
@@ -10,13 +11,10 @@ import time
 
 import numpy as np
 
-from repro.core.baselines import pka_plan, sieve_plan, stem_root_plan
-from repro.core.sampler import GCLSampler, GCLSamplerConfig
+from repro.core.sampler import GCLSamplerConfig
 from repro.core.train import GCLTrainConfig
-from repro.sim.simulate import (
-    full_metrics, reconstruct, sampling_error, sim_wall_time,
-    simulate_program, speedup,
-)
+from repro.sampling import available_methods, evaluate_metrics, get_method
+from repro.sim.simulate import simulate_program
 from repro.tracing.programs import PAPER_PROGRAMS, get_program
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
@@ -48,28 +46,28 @@ def plans_for(program_name: str, fast: bool = False, verbose: bool = True):
     if key in _plan_cache:
         return _plan_cache[key]
     prog = get_program(program_name)
-    t0 = time.time()
-    gcl = GCLSampler(sampler_config(fast)).fit(prog)
-    if verbose:
-        print(f"  [gcl] {program_name}: K={gcl.num_clusters} "
-              f"({time.time() - t0:.0f}s)", flush=True)
-    plans = {
-        "GCL-Sampler": gcl,
-        "PKA": pka_plan(prog),
-        "Sieve": sieve_plan(prog),
-        "STEM+ROOT": stem_root_plan(prog),
-    }
+    plans = {}
+    for method_id in available_methods():
+        kwargs = {"cfg": sampler_config(fast)} if method_id == "gcl" else {}
+        method = get_method(method_id, **kwargs)
+        t0 = time.time()
+        plan, _ = method.run(prog)
+        if verbose and method_id == "gcl":
+            print(f"  [gcl] {program_name}: K={plan.num_clusters} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+        plans[plan.method] = plan
     _plan_cache[key] = plans
     return plans
 
 
 def evaluate(plan, program_name: str, platform: str = "P1"):
     ms = metrics_for(program_name, platform)
+    res = evaluate_metrics(plan, ms, program=program_name, platform=platform)
     return {
-        "error_pct": sampling_error(plan, ms),
-        "speedup": speedup(plan, ms),
-        "clusters": plan.num_clusters,
-        "reps": len(plan.rep_indices()),
+        "error_pct": res.error_pct["cycles"],
+        "speedup": res.speedup,
+        "clusters": res.num_clusters,
+        "reps": res.num_reps,
     }
 
 

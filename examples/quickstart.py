@@ -1,21 +1,23 @@
-"""Quickstart: the whole GCL-Sampler pipeline on one workload in ~2 minutes.
+"""Quickstart: every registered sampling method on one workload in ~2 minutes,
+through the unified ``repro.sampling`` API.
 
     PYTHONPATH=src python examples/quickstart.py [--program nw]
 
-Stages (paper Fig. 2): trace -> HRG -> RGCN contrastive training ->
-embeddings -> K-Means -> representative selection -> sampled simulation,
-with error/speedup against full simulation and the three baselines.
+Stages (paper Fig. 2, owned by the ``gcl`` method): trace -> HRG -> RGCN
+contrastive training -> embeddings -> K-Means -> representative selection,
+then one ``evaluate`` call per method for error/speedup against full
+simulation.  Artifacts (trained encoder, embeddings, plans) land in
+``--out`` and are replayed on re-runs.  For the full method x program x
+platform grid, use ``python -m repro.launch.sample``.
 """
 
 import argparse
 import time
 
-import numpy as np
-
-from repro.core.baselines import pka_plan, sieve_plan, stem_root_plan
-from repro.core.sampler import GCLSampler, GCLSamplerConfig
-from repro.core.train import GCLTrainConfig
-from repro.sim.simulate import sampling_error, simulate_program, speedup
+from repro.sampling import (
+    ArtifactStore, available_methods, evaluate_metrics, get_method,
+)
+from repro.sim.simulate import simulate_program
 from repro.tracing.programs import PAPER_PROGRAMS, get_program
 
 
@@ -23,31 +25,34 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--program", default="nw", choices=PAPER_PROGRAMS)
     ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--out", default="runs/quickstart")
     args = ap.parse_args()
 
     prog = get_program(args.program)
+    store = ArtifactStore(args.out)
     print(f"== {args.program}: {len(prog)} kernel invocations ==")
 
-    t0 = time.time()
-    sampler = GCLSampler(GCLSamplerConfig(
-        cap_instr=64,
-        train=GCLTrainConfig(steps=args.steps, batch_size=8),
-    ))
-    plan = sampler.fit(prog, verbose=True)
-    print(f"GCL-Sampler: K={plan.num_clusters} clusters, "
-          f"{len(plan.rep_indices())} representative(s) "
-          f"({time.time() - t0:.0f}s)")
+    metrics = simulate_program(prog, "P1")  # full simulation, once
+    results = []
+    for method_id in available_methods():
+        kwargs = (
+            dict(steps=args.steps, batch_size=8, cap_instr=64)
+            if method_id == "gcl" else {}
+        )
+        method = get_method(method_id, **kwargs)
+        t0 = time.time()
+        plan, _ = method.run(prog, store=store)
+        print(f"{plan.method}: K={plan.num_clusters} clusters, "
+              f"{len(plan.rep_indices())} representative(s) "
+              f"({time.time() - t0:.0f}s)")
+        results.append(evaluate_metrics(plan, metrics, program=prog.name,
+                                        platform="P1"))
 
-    metrics = simulate_program(prog, "P1")
-    rows = [("GCL-Sampler", plan)]
-    rows += [("PKA", pka_plan(prog)), ("Sieve", sieve_plan(prog)),
-             ("STEM+ROOT", stem_root_plan(prog))]
     print(f"\n{'method':14s}{'clusters':>9s}{'reps':>6s}"
           f"{'error %':>9s}{'speedup':>9s}")
-    for name, p in rows:
-        print(f"{name:14s}{p.num_clusters:9d}{len(p.rep_indices()):6d}"
-              f"{sampling_error(p, metrics):9.2f}"
-              f"{speedup(p, metrics):8.1f}x")
+    for r in results:
+        print(f"{r.method:14s}{r.num_clusters:9d}{r.num_reps:6d}"
+              f"{r.error_pct['cycles']:9.2f}{r.speedup:8.1f}x")
 
 
 if __name__ == "__main__":

@@ -1,22 +1,15 @@
 """Sampled-simulation workflow on a workload derived from an ASSIGNED
 architecture config (the framework-integration path, paper §5.4): the LM zoo
-is the simulation subject.
+is the simulation subject, driven through the unified ``repro.sampling``
+API — one ``run`` + one ``evaluate`` call owns the whole comparison.
 
     PYTHONPATH=src python examples/sampled_simulation.py --arch granite-3-2b
 """
 
 import argparse
-import time
-
-import numpy as np
 
 from repro.configs import list_archs
-from repro.core.sampler import GCLSampler, GCLSamplerConfig
-from repro.core.train import GCLTrainConfig
-from repro.sim.simulate import (
-    full_metrics, reconstruct, sampling_error, sim_wall_time,
-    simulate_program, speedup,
-)
+from repro.sampling import evaluate, get_method
 from repro.tracing.programs import lm_program
 
 
@@ -31,25 +24,21 @@ def main():
     print(f"== lm:{args.arch}: {len(prog)} kernel invocations "
           f"(prefill + {args.steps - 1} decode steps) ==")
 
-    sampler = GCLSampler(GCLSamplerConfig(
-        cap_instr=64,
-        train=GCLTrainConfig(steps=args.train_steps, batch_size=16),
-    ))
-    plan = sampler.fit(prog, verbose=True)
-    metrics = simulate_program(prog, "P1")
+    method = get_method("gcl", steps=args.train_steps, batch_size=16,
+                        cap_instr=64)
+    plan, artifacts = method.run(prog)
+    res = evaluate(plan, prog, "P1")
 
-    full = full_metrics(metrics)
-    est = reconstruct(plan, metrics)
-    t_full = sim_wall_time(metrics)
-    t_sampled = sim_wall_time(metrics, plan.rep_indices())
-    print(f"\nclusters: {plan.num_clusters}  reps: {len(plan.rep_indices())}")
-    print(f"cycles: full {full['cycles']:.3e} vs sampled {est['cycles']:.3e} "
-          f"(err {sampling_error(plan, metrics):.2f}%)")
-    print(f"kernel-time speedup (eq.6): {speedup(plan, metrics):.1f}x")
-    print(f"simulator wall-time: {t_full:.1f}s -> {t_sampled:.1f}s "
-          f"({t_full / max(t_sampled, 1e-9):.1f}x)")
+    print(f"\nclusters: {res.num_clusters}  reps: {res.num_reps}")
+    print(f"cycles: full {res.full['cycles']:.3e} vs sampled "
+          f"{res.sampled['cycles']:.3e} (err {res.error_pct['cycles']:.2f}%)")
+    print(f"kernel-time speedup (eq.6): {res.speedup:.1f}x")
+    print(f"simulator wall-time: {res.sim_time_full_s:.1f}s -> "
+          f"{res.sim_time_sampled_s:.1f}s ({res.sim_speedup:.1f}x)")
     for m in ("ipc", "l1_hit", "l2_hit", "occupancy"):
-        print(f"  {m:10s} full {full[m]:.4f} sampled {est[m]:.4f}")
+        print(f"  {m:10s} full {res.full[m]:.4f} sampled {res.sampled[m]:.4f}")
+    print(f"stage timings: "
+          + " ".join(f"{k}={v:.1f}s" for k, v in artifacts.timings.items()))
 
 
 if __name__ == "__main__":

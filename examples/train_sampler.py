@@ -1,6 +1,11 @@
 """End-to-end driver (paper's kind): train the RGCN contrastive sampler for a
 few hundred steps on a real workload's kernel graphs, with validation
-InfoNCE, then cluster and report the achieved sampling quality.
+InfoNCE, then cluster and report the achieved sampling quality through the
+unified evaluation harness.
+
+This example drives the STAGE-level surface (build_graphs / train / embed /
+cluster on ``GCLSampler``) that the registered ``gcl`` method wraps; for the
+one-call path see ``examples/quickstart.py`` or ``repro.launch.sample``.
 
     PYTHONPATH=src python examples/train_sampler.py --program AlexNet --steps 200
 """
@@ -12,7 +17,7 @@ import numpy as np
 
 from repro.core.sampler import GCLSampler, GCLSamplerConfig
 from repro.core.train import GCLTrainConfig
-from repro.sim.simulate import sampling_error, simulate_program, speedup
+from repro.sampling import evaluate
 from repro.tracing.programs import PAPER_PROGRAMS, get_program
 
 
@@ -46,10 +51,10 @@ def main():
     emb = sampler.embed(graphs)
     seqs = np.array([k.seq for k in prog.kernels])
     plan = sampler.cluster(emb, seqs)
-    metrics = simulate_program(prog, "P1")
-    print(f"K={plan.num_clusters} (silhouette mode: {plan.extra.get('mode')})"
-          f" -> error {sampling_error(plan, metrics):.2f}%, "
-          f"speedup {speedup(plan, metrics):.1f}x")
+    res = evaluate(plan, prog, "P1")
+    print(f"K={res.num_clusters} (silhouette mode: {plan.extra.get('mode')})"
+          f" -> error {res.error_pct['cycles']:.2f}%, "
+          f"speedup {res.speedup:.1f}x")
 
 
 if __name__ == "__main__":

@@ -7,8 +7,11 @@ rgcn         RGCN encoder + projection head (features built in-model)
 contrastive  symmetric InfoNCE
 train        distributed contrastive trainer
 clustering   K-Means + silhouette K-selection
-sampler      end-to-end GCL-Sampler pipeline
-baselines    PKA / Sieve / STEM+ROOT
+sampler      end-to-end GCL-Sampler pipeline (engine of the `gcl` method)
+baselines    PKA / Sieve / STEM+ROOT partitions (engines of the baselines)
+
+The public, method-agnostic surface lives in ``repro.sampling``:
+``get_method(id)`` / ``SamplingMethod`` / ``ArtifactStore`` / ``evaluate``.
 """
 
 from repro.core.batching import (

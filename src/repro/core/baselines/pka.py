@@ -9,6 +9,9 @@ The feature set deliberately excludes working-set / access-pattern /
 dependence structure — exactly the limited expressiveness the paper blames
 for PKA's 20.9% average error: kernels with matching mixes but different
 cache behavior or loop trip counts collapse into one cluster.
+
+``pka_plan`` is the legacy free-function entry point — prefer
+``repro.sampling.get_method("pka")``.
 """
 
 from __future__ import annotations
@@ -16,7 +19,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.clustering import select_k_and_cluster
-from repro.core.sampler import plan_from_labels
+from repro.sampling.base import plan_from_labels
 from repro.sim.simulate import SamplingPlan
 from repro.tracing.programs import Program
 
@@ -39,6 +42,7 @@ def pka_features(program: Program, platform="P1") -> np.ndarray:
 
 
 def pka_plan(program: Program, k_max=48, seed=0) -> SamplingPlan:
+    """Deprecated shim — use ``repro.sampling.get_method("pka")``."""
     x = pka_features(program)
     labels, info = select_k_and_cluster(x, k_max=k_max, seed=seed)
     seqs = np.array([k.seq for k in program.kernels])

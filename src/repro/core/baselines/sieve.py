@@ -8,30 +8,39 @@ stratum, weighted by stratum size.
 Name-keyed grouping is Sieve's crippling constraint on workloads whose
 invocations carry distinct names (nw / lu / 3mm): every kernel becomes its
 own cluster and no reduction is possible.
+
+``sieve_partition`` produces the (labels, CTA-priority) pair; representative
+selection goes through the shared ``repro.sampling.plan_from_labels``.
+``sieve_plan`` is the legacy free-function entry point — prefer
+``repro.sampling.get_method("sieve")``.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.sampler import SamplingPlan
+from repro.sampling.base import plan_from_labels
+from repro.sim.simulate import SamplingPlan
 from repro.tracing.programs import Program
 
 COV_THRESHOLD = 0.10
 
 
-def sieve_plan(program: Program, platform="P1") -> SamplingPlan:
+def sieve_partition(program: Program, platform: str = "P1"):
+    """Name partition + recursive CoV stratification.
+
+    Returns ``(labels, ctas)``: cluster labels per invocation and the CTA
+    counts used as the representative priority (Sieve's "first kernel with
+    the max CTA count" rule).
+    """
     names = [k.name for k in program.kernels]
     instrs = np.array([k.stats(platform).warp_instructions for k in program.kernels])
     ctas = np.array([k.stats(platform).ctas for k in program.kernels])
-    seqs = np.array([k.seq for k in program.kernels])
 
     labels = np.full(len(names), -1, int)
     next_label = 0
-    reps: dict[int, list[int]] = {}
     for name in sorted(set(names)):
         idx = np.array([i for i, n in enumerate(names) if n == name])
-        vals = instrs[idx]
 
         # recursive CoV stratification: split at the largest relative gap
         # until every stratum's instruction-count CoV is below threshold
@@ -46,13 +55,14 @@ def sieve_plan(program: Program, platform="P1") -> SamplingPlan:
             cut = int(np.argmax(rel_gap)) + 1
             return stratify(order[:cut]) + stratify(order[cut:])
 
-        strata = stratify(idx)
-        for stratum in strata:
+        for stratum in stratify(idx):
             labels[stratum] = next_label
-            # first kernel with the maximum CTA count (original Sieve rule)
-            c = ctas[stratum]
-            cand = stratum[c == c.max()]
-            rep = cand[np.argmin(seqs[cand])]
-            reps[next_label] = [int(rep)]
             next_label += 1
-    return SamplingPlan(labels=labels, reps=reps, method="Sieve")
+    return labels, ctas
+
+
+def sieve_plan(program: Program, platform: str = "P1") -> SamplingPlan:
+    """Deprecated shim — use ``repro.sampling.get_method("sieve")``."""
+    labels, ctas = sieve_partition(program, platform)
+    seqs = np.array([k.seq for k in program.kernels])
+    return plan_from_labels(labels, seqs, "Sieve", priority=ctas)

@@ -9,31 +9,45 @@ model picks MULTIPLE representatives per cluster:
 
 spread evenly over the cluster.  Consistently low error, at the cost of a
 much larger representative set (the paper's 56.57x vs 258.94x speedup gap).
+
+``stem_root_times``/``stem_root_partition`` produce the profile and the
+(labels, multi-rep selector) pair; representative selection goes through
+the shared ``repro.sampling.plan_from_labels``.  ``stem_root_plan`` is the
+legacy free-function entry point — prefer
+``repro.sampling.get_method("stem_root")``.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.sim.simulate import SamplingPlan
-from repro.tracing.programs import Program
+from repro.sampling.base import plan_from_labels
 from repro.sim.hardware import PLATFORMS
+from repro.sim.simulate import SamplingPlan
 from repro.sim.timing import simulate_kernel
+from repro.tracing.programs import Program
 
 Z_SCORE = 1.96
 GAP_REL = 0.15  # relative gap threshold for splitting time clusters
 
 
-def stem_root_plan(program: Program, platform="P1", eps=0.25) -> SamplingPlan:
+def stem_root_times(program: Program, platform: str = "P1") -> np.ndarray:
+    """Profiled per-invocation execution times (the STEM signature)."""
     hw = PLATFORMS[platform]
-    times = np.array(
+    return np.array(
         [simulate_kernel(k.stats(platform), hw).time_s for k in program.kernels]
     )
-    names = [k.name for k in program.kernels]
-    seqs = np.array([k.seq for k in program.kernels])
 
+
+def stem_root_partition(times: np.ndarray, names: list, eps: float = 0.25):
+    """STEM clustering + ROOT's representative policy.
+
+    Returns ``(labels, rep_selector)`` where ``rep_selector(cluster,
+    members)`` implements ROOT's error-model sample size, spread evenly over
+    the cluster's sorted times — plugged into ``plan_from_labels``.
+    """
+    times = np.asarray(times)
     labels = np.full(len(names), -1, int)
-    reps: dict[int, list[int]] = {}
     next_label = 0
     for name in sorted(set(names)):
         idx = np.array([i for i, n in enumerate(names) if n == name])
@@ -47,16 +61,27 @@ def stem_root_plan(program: Program, platform="P1", eps=0.25) -> SamplingPlan:
                 clusters.append([])
             clusters[-1].append(order[j])
         for members in clusters:
-            members = np.asarray(members)
-            labels[members] = next_label
-            mt = times[members]
-            cov = mt.std() / max(mt.mean(), 1e-12)
-            # ROOT: sample size from the statistical error model
-            n_rep = int(np.ceil((Z_SCORE * cov / eps) ** 2))
-            n_rep = int(np.clip(n_rep, 1, len(members)))
-            # spread representatives evenly across the sorted cluster
-            pos = np.linspace(0, len(members) - 1, n_rep).round().astype(int)
-            chosen = members[np.argsort(times[members])][pos]
-            reps[next_label] = sorted(int(c) for c in set(chosen.tolist()))
+            labels[np.asarray(members)] = next_label
             next_label += 1
-    return SamplingPlan(labels=labels, reps=reps, method="STEM+ROOT")
+
+    def rep_selector(cluster: int, members: np.ndarray) -> list[int]:
+        mt = times[members]
+        cov = mt.std() / max(mt.mean(), 1e-12)
+        # ROOT: sample size from the statistical error model
+        n_rep = int(np.clip(np.ceil((Z_SCORE * cov / eps) ** 2), 1, len(members)))
+        # spread representatives evenly across the sorted cluster
+        pos = np.linspace(0, len(members) - 1, n_rep).round().astype(int)
+        return members[np.argsort(mt)][pos].tolist()
+
+    return labels, rep_selector
+
+
+def stem_root_plan(program: Program, platform: str = "P1",
+                   eps: float = 0.25) -> SamplingPlan:
+    """Deprecated shim — use ``repro.sampling.get_method("stem_root")``."""
+    times = stem_root_times(program, platform)
+    names = [k.name for k in program.kernels]
+    seqs = np.array([k.seq for k in program.kernels])
+    labels, rep_selector = stem_root_partition(times, names, eps)
+    return plan_from_labels(labels, seqs, "STEM+ROOT",
+                            rep_selector=rep_selector)

@@ -3,12 +3,18 @@
   program -> NVBit-like traces -> HRGs -> RGCN contrastive training ->
   kernel embeddings z_k -> K-Means (silhouette K) -> representatives
   (first invocation per cluster) -> SamplingPlan.
+
+This class is the ENGINE behind the registered ``gcl`` sampling method;
+prefer the unified API (``repro.sampling.get_method("gcl")``) for new code.
+``plan_from_labels`` now lives in ``repro.sampling`` (shared by all
+methods) and is re-exported here for backward compatibility.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
 
@@ -16,6 +22,7 @@ from repro.core.clustering import select_k_and_cluster
 from repro.core.graphs import KernelGraph, build_kernel_graph
 from repro.core.rgcn import RGCNConfig
 from repro.core.train import ContrastiveTrainer, GCLTrainConfig
+from repro.sampling.base import plan_from_labels  # noqa: F401  (compat shim)
 from repro.sim.simulate import SamplingPlan
 from repro.tracing.programs import Program
 
@@ -30,20 +37,8 @@ class GCLSamplerConfig:
     train_subsample: int = 400   # cap on kernels used for contrastive training
 
 
-def plan_from_labels(labels: np.ndarray, seqs: np.ndarray, method: str,
-                     extra=None) -> SamplingPlan:
-    """Representative = first invocation (min seq) in each cluster."""
-    reps = {}
-    for c in np.unique(labels):
-        members = np.nonzero(labels == c)[0]
-        first = members[np.argmin(seqs[members])]
-        reps[int(c)] = [int(first)]
-    return SamplingPlan(labels=np.asarray(labels), reps=reps, method=method,
-                        extra=extra or {})
-
-
 class GCLSampler:
-    def __init__(self, cfg: GCLSamplerConfig = None):
+    def __init__(self, cfg: Optional[GCLSamplerConfig] = None):
         self.cfg = cfg or GCLSamplerConfig()
         self.trainer = ContrastiveTrainer(self.cfg.rgcn, self.cfg.train)
         self.params = None
@@ -69,7 +64,12 @@ class GCLSampler:
     def embed(self, graphs: list[KernelGraph]) -> np.ndarray:
         """Streaming packed-bucketed embed with a content-hash cache:
         repeated kernel invocations are encoded once (see trainer.embed)."""
-        assert self.params is not None, "call train() first"
+        if self.params is None:
+            raise RuntimeError(
+                "GCLSampler has no trained encoder: call train(graphs) (or "
+                "the end-to-end fit(program)) before embed(), or adopt "
+                "pretrained params via repro.sampling's ArtifactStore replay"
+            )
         return self.trainer.embed(self.params, graphs)
 
     def cluster(self, embeddings: np.ndarray, seqs: np.ndarray) -> SamplingPlan:

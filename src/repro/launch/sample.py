@@ -1,0 +1,220 @@
+"""One-command reproduction of the paper's sampling table.
+
+Sweeps the full method x program x platform grid through the unified
+``repro.sampling`` API and writes a machine-readable results JSON
+(schema ``repro.sampling.results/v1``) plus reusable artifacts/plans:
+
+  PYTHONPATH=src python -m repro.launch.sample \\
+      --method gcl,pka,sieve,stem_root --programs nw,3mm \\
+      --platforms P1,P2,P3 --out runs/table
+  PYTHONPATH=src python -m repro.launch.sample --method gcl,pka --smoke
+
+Per the paper's cross-architecture protocol, clustering decisions are made
+once (on the method's decision platform, P1 by default) and the same plan
+is evaluated on every ``--platforms`` entry.  Artifacts are content-hash
+cached under ``<out>/artifacts`` — a second sweep over an overlapping grid
+replays trained encoders instead of refitting.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.sampling import (
+    ArtifactStore, available_methods, evaluate_metrics, get_method,
+)
+from repro.sim.hardware import PLATFORMS
+from repro.sim.simulate import METRIC_NAMES, simulate_program
+from repro.tracing.programs import PAPER_PROGRAMS, get_program
+
+RESULTS_SCHEMA = "repro.sampling.results/v1"
+SMOKE_PROGRAMS = ["3mm", "backprop"]
+SMOKE_GCL = dict(steps=10, batch_size=4, cap_instr=48)
+
+
+def _method_kwargs(method_id: str, *, smoke: bool = False,
+                   gcl_steps: int = 0, seed: int = 0) -> dict:
+    if method_id == "pka":
+        return {"seed": seed} if seed else {}
+    if method_id != "gcl":
+        return {}  # sieve / stem_root are deterministic, no seed
+    kw: dict = dict(SMOKE_GCL) if smoke else {}
+    if gcl_steps:
+        kw["steps"] = gcl_steps
+    if seed:
+        kw["seed"] = seed
+    return kw
+
+
+def run_grid(methods: list[str], programs: list[str], platforms: list[str],
+             out_dir: str, *, smoke: bool = False, gcl_steps: int = 0,
+             seed: int = 0, verbose: bool = True) -> dict:
+    """Run every (method, program) cell once, evaluate on every platform."""
+    store = ArtifactStore(os.path.join(out_dir, "artifacts"))
+    results: list[dict] = []
+    failures: list[dict] = []
+    metrics_cache: dict = {}  # (program, platform) -> full simulation
+
+    def metrics_for(program_name, program, platform):
+        key = (program_name, platform)
+        if key not in metrics_cache:
+            metrics_cache[key] = simulate_program(program, platform)
+        return metrics_cache[key]
+
+    t_start = time.time()
+    for method_id in methods:
+        method = get_method(
+            method_id,
+            **_method_kwargs(method_id, smoke=smoke, gcl_steps=gcl_steps,
+                             seed=seed))
+        for program_name in programs:
+            cell = f"{method_id} x {program_name}"
+            try:
+                program = get_program(program_name)
+                t0 = time.time()
+                plan, artifacts = method.run(program, store=store)
+                store.save_plan(plan, method_id, artifacts.key)
+                fit_s = time.time() - t0
+                if verbose:
+                    print(f"  [{cell}] K={plan.num_clusters} "
+                          f"reps={len(plan.rep_indices())} ({fit_s:.1f}s)",
+                          flush=True)
+                for platform in platforms:
+                    res = evaluate_metrics(
+                        plan, metrics_for(program_name, program, platform),
+                        program=program.name, platform=platform)
+                    row = res.to_dict()
+                    row.update(method_id=method_id, fit_s=fit_s,
+                               artifact_key=artifacts.key)
+                    results.append(row)
+            except Exception as e:  # a broken cell must not kill the sweep
+                failures.append({"cell": cell, "error": f"{type(e).__name__}: {e}"})
+                if verbose:
+                    print(f"  [{cell}] FAILED: {e}", flush=True)
+    return {
+        "schema": RESULTS_SCHEMA,
+        "created_unix": time.time(),
+        "grid": {"methods": methods, "programs": programs,
+                 "platforms": platforms, "smoke": smoke},
+        "wall_time_s": time.time() - t_start,
+        "results": results,
+        "failures": failures,
+    }
+
+
+def validate_results(doc: dict) -> None:
+    """Schema check for the results JSON; raises ValueError on violation."""
+    def fail(msg):
+        raise ValueError(f"results JSON invalid: {msg}")
+
+    if doc.get("schema") != RESULTS_SCHEMA:
+        fail(f"schema is {doc.get('schema')!r}, want {RESULTS_SCHEMA!r}")
+    grid = doc.get("grid")
+    if not isinstance(grid, dict):
+        fail("missing grid")
+    for key in ("methods", "programs", "platforms"):
+        if not isinstance(grid.get(key), list) or not grid[key]:
+            fail(f"grid.{key} must be a non-empty list")
+    if not isinstance(doc.get("results"), list):
+        fail("results must be a list")
+    if not isinstance(doc.get("failures"), list):
+        fail("failures must be a list")
+    for i, row in enumerate(doc["results"]):
+        where = f"results[{i}]"
+        for key in ("method", "method_id", "program", "platform"):
+            if not isinstance(row.get(key), str) or not row[key]:
+                fail(f"{where}.{key} must be a non-empty string")
+        if row["method_id"] not in grid["methods"]:
+            fail(f"{where}.method_id {row['method_id']!r} not in grid")
+        if row["platform"] not in grid["platforms"]:
+            fail(f"{where}.platform {row['platform']!r} not in grid")
+        for key in ("num_kernels", "num_clusters", "num_reps"):
+            if not isinstance(row.get(key), int) or row[key] <= 0:
+                fail(f"{where}.{key} must be a positive int")
+        err = row.get("error_pct")
+        if not isinstance(err, dict):
+            fail(f"{where}.error_pct must be a dict")
+        for name in METRIC_NAMES:
+            v = err.get(name)
+            if not isinstance(v, (int, float)) or v < 0:
+                fail(f"{where}.error_pct[{name!r}] must be a float >= 0")
+        for key in ("speedup", "sim_speedup"):
+            if not isinstance(row.get(key), (int, float)) or row[key] <= 0:
+                fail(f"{where}.{key} must be a positive number")
+        for key in ("sim_time_full_s", "sim_time_sampled_s", "fit_s"):
+            if not isinstance(row.get(key), (int, float)) or row[key] < 0:
+                fail(f"{where}.{key} must be a number >= 0")
+
+
+def _print_table(doc: dict) -> None:
+    print(f"\n{'method':14s}{'program':10s}{'plat':>5s}{'K':>5s}{'reps':>6s}"
+          f"{'err %':>8s}{'speedup':>9s}")
+    for row in doc["results"]:
+        print(f"{row['method']:14s}{row['program']:10s}{row['platform']:>5s}"
+              f"{row['num_clusters']:5d}{row['num_reps']:6d}"
+              f"{row['error_pct']['cycles']:8.2f}{row['speedup']:8.1f}x")
+    if doc["failures"]:
+        print(f"\n{len(doc['failures'])} cell(s) FAILED:")
+        for f in doc["failures"]:
+            print(f"  {f['cell']}: {f['error']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.sample",
+        description="Sweep sampling methods over programs and platforms.")
+    ap.add_argument("--method", default="all",
+                    help="comma-separated method ids, or 'all' "
+                         f"(known: {','.join(available_methods())})")
+    ap.add_argument("--programs", default="",
+                    help="comma-separated program names "
+                         "(default: smoke set with --smoke, else all paper "
+                         f"programs: {','.join(PAPER_PROGRAMS)})")
+    ap.add_argument("--platforms", default="P1",
+                    help=f"comma-separated platforms (known: "
+                         f"{','.join(PLATFORMS)})")
+    ap.add_argument("--out", default="runs/sample",
+                    help="run directory (artifacts, plans, results.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny GCL config + small default programs")
+    ap.add_argument("--gcl-steps", type=int, default=0,
+                    help="override GCL contrastive training steps")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="reseed the stochastic methods (gcl, pka); "
+                         "sieve/stem_root are deterministic")
+    args = ap.parse_args(argv)
+
+    methods = (available_methods() if args.method == "all"
+               else [m.strip() for m in args.method.split(",") if m.strip()])
+    for m in methods:
+        if m not in available_methods():
+            ap.error(f"unknown method {m!r}; known: {available_methods()}")
+    if args.programs:
+        programs = [p.strip() for p in args.programs.split(",") if p.strip()]
+    else:
+        programs = SMOKE_PROGRAMS if args.smoke else list(PAPER_PROGRAMS)
+    platforms = [p.strip() for p in args.platforms.split(",") if p.strip()]
+    for p in platforms:
+        if p not in PLATFORMS:
+            ap.error(f"unknown platform {p!r}; known: {list(PLATFORMS)}")
+
+    print(f"== sampling grid: {len(methods)} method(s) x {len(programs)} "
+          f"program(s) x {len(platforms)} platform(s) -> {args.out} ==")
+    doc = run_grid(methods, programs, platforms, args.out, smoke=args.smoke,
+                   gcl_steps=args.gcl_steps, seed=args.seed)
+    validate_results(doc)
+    os.makedirs(args.out, exist_ok=True)
+    results_path = os.path.join(args.out, "results.json")
+    with open(results_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    _print_table(doc)
+    print(f"\nresults JSON: {results_path} "
+          f"({len(doc['results'])} rows, {doc['wall_time_s']:.0f}s)")
+    return 1 if doc["failures"] else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,34 @@
+"""repro.sampling — the one public API for sampled GPU simulation.
+
+    from repro.sampling import get_method, evaluate, ArtifactStore
+
+    method = get_method("gcl", steps=60)
+    plan, artifacts = method.run(program, store=ArtifactStore("runs/a"))
+    result = evaluate(plan, program, platform="P1")
+
+Methods (``available_methods()``): ``gcl``, ``pka``, ``sieve``,
+``stem_root`` — all implementing the :class:`SamplingMethod` protocol.
+The full method x program x platform grid: ``python -m repro.launch.sample``.
+
+NOTE: method classes register lazily on first ``get_method`` /
+``available_methods`` call, so importing this package never pulls in the
+trainer stack.
+"""
+
+from repro.sampling.base import (
+    Artifacts, SamplingMethod, config_hash, plan_from_labels,
+)
+from repro.sampling.evaluate import EvalResult, evaluate, evaluate_metrics
+from repro.sampling.registry import (
+    SAMPLING_METHODS, available_methods, get_method, register_method,
+)
+from repro.sampling.store import (
+    ArtifactStore, flatten_tree, program_fingerprint, unflatten_tree,
+)
+
+__all__ = [
+    "Artifacts", "ArtifactStore", "EvalResult", "SAMPLING_METHODS",
+    "SamplingMethod", "available_methods", "config_hash", "evaluate",
+    "evaluate_metrics", "flatten_tree", "get_method", "plan_from_labels",
+    "program_fingerprint", "register_method", "unflatten_tree",
+]

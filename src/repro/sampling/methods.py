@@ -1,0 +1,233 @@
+"""The four paper methods behind one protocol.
+
+| id          | display name | prepare() artifact            | plan()                          |
+|-------------|--------------|-------------------------------|---------------------------------|
+| `gcl`       | GCL-Sampler  | trained RGCN params + z_k     | silhouette K-Means on z_k       |
+| `pka`       | PKA          | 12-d profiled feature matrix  | silhouette K-Means on features  |
+| `sieve`     | Sieve        | name/CoV strata + CTA counts  | max-CTA representative          |
+| `stem_root` | STEM+ROOT    | profiled execution times      | STEM strata + ROOT multi-rep    |
+
+Every method is constructible through ``repro.sampling.get_method(id,
+**overrides)`` with identical `prepare`/`plan`/`run` signatures, making the
+full method x program x platform sweep (``repro.launch.sample``) a plain
+loop over registry ids.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import asdict, replace
+from typing import Optional
+
+import numpy as np
+
+from repro.core.baselines.pka import pka_features
+from repro.core.baselines.sieve import sieve_partition
+from repro.core.baselines.stem_root import stem_root_partition, stem_root_times
+from repro.core.clustering import select_k_and_cluster
+from repro.core.sampler import GCLSampler, GCLSamplerConfig
+from repro.sampling.base import (
+    Artifacts, SamplingMethod, config_hash, plan_from_labels,
+)
+from repro.sampling.registry import register_method
+from repro.sampling.store import program_fingerprint
+from repro.sim.simulate import SamplingPlan
+from repro.tracing.programs import Program
+
+
+def _seqs(program: Program) -> np.ndarray:
+    return np.array([k.seq for k in program.kernels])
+
+
+def _artifacts(method: SamplingMethod, program: Program, payload: dict,
+               timings: dict, meta: Optional[dict] = None,
+               provenance: str = "") -> Artifacts:
+    return Artifacts(
+        method=method.id, program=program_fingerprint(program),
+        config_hash=config_hash(method.config()), payload=payload,
+        timings=timings, meta=meta or {}, provenance=provenance,
+    )
+
+
+@register_method
+class GCLMethod(SamplingMethod):
+    """The paper's contribution, wrapping :class:`GCLSampler`.
+
+    The trained encoder lives on the instance: the first ``prepare`` fits
+    the RGCN contrastively, subsequent programs (or replayed artifacts via
+    ``adopt``) reuse it and only pay for graph building + embedding.
+    """
+
+    id = "gcl"
+    display_name = "GCL-Sampler"
+
+    def __init__(self, cfg: Optional[GCLSamplerConfig] = None, *,
+                 steps: Optional[int] = None,
+                 batch_size: Optional[int] = None,
+                 cap_instr: Optional[int] = None,
+                 k_max: Optional[int] = None,
+                 seed: Optional[int] = None):
+        cfg = cfg or GCLSamplerConfig()
+        train_kw = {k: v for k, v in
+                    [("steps", steps), ("batch_size", batch_size),
+                     ("seed", seed)] if v is not None}
+        cfg_kw = {k: v for k, v in
+                  [("cap_instr", cap_instr), ("k_max", k_max)]
+                  if v is not None}
+        if train_kw:
+            cfg_kw["train"] = replace(cfg.train, **train_kw)
+        self.cfg = replace(cfg, **cfg_kw) if cfg_kw else cfg
+        self.sampler = GCLSampler(self.cfg)
+        self._trained_on: Optional[str] = None  # program fp of the fit
+
+    def config(self) -> dict:
+        return asdict(self.cfg)
+
+    def _encoder_provenance(self, program_fp: str) -> str:
+        """Non-empty when the encoder was fit on a DIFFERENT program: the
+        artifact content then depends on that program too, so it must be
+        part of the content key (keeps replayed results independent of
+        store history / grid order)."""
+        if self._trained_on and self._trained_on != program_fp:
+            return f"enc-{self._trained_on}"
+        return ""
+
+    def artifact_key(self, program: Program) -> str:
+        base = super().artifact_key(program)
+        prov = self._encoder_provenance(program_fingerprint(program))
+        return f"{base}-{prov}" if prov else base
+
+    def prepare(self, program: Program) -> Artifacts:
+        t0 = time.time()
+        graphs = self.sampler.build_graphs(program)
+        t1 = time.time()
+        meta: dict = {}
+        if self.sampler.params is None:
+            info = self.sampler.train(graphs)
+            self._trained_on = program_fingerprint(program)
+            meta["train"] = {
+                k: info[k] for k in
+                ("val_loss", "val_acc", "trunc_nodes", "step_compiles")
+                if k in info
+            }
+        else:
+            meta["encoder_reused"] = True
+        meta["trained_on"] = self._trained_on
+        t2 = time.time()
+        emb = self.sampler.embed(graphs)
+        t3 = time.time()
+        payload = {
+            "params": self.sampler.params,
+            "embeddings": emb,
+            "seqs": _seqs(program),
+        }
+        timings = {"graphs_s": t1 - t0, "train_s": t2 - t1,
+                   "embed_s": t3 - t2}
+        return _artifacts(
+            self, program, payload, timings, meta,
+            provenance=self._encoder_provenance(program_fingerprint(program)))
+
+    def plan(self, program: Program, artifacts: Artifacts) -> SamplingPlan:
+        t0 = time.time()
+        emb = np.asarray(artifacts.payload["embeddings"])
+        seqs = np.asarray(artifacts.payload["seqs"])
+        labels, info = select_k_and_cluster(
+            emb, k_max=self.cfg.k_max, seed=self.cfg.train.seed)
+        plan = plan_from_labels(labels, seqs, self.display_name, extra=info)
+        plan.extra["timings"] = dict(artifacts.timings,
+                                     cluster_s=time.time() - t0)
+        plan.extra.update(artifacts.meta)
+        return plan
+
+    def adopt(self, artifacts: Artifacts) -> None:
+        params = artifacts.payload.get("params")
+        if params is not None:
+            self.sampler.params = params
+            self._trained_on = artifacts.meta.get("trained_on",
+                                                  artifacts.program)
+
+
+@register_method
+class PKAMethod(SamplingMethod):
+    id = "pka"
+    display_name = "PKA"
+
+    def __init__(self, platform: str = "P1", k_max: int = 48, seed: int = 0):
+        self.platform = platform
+        self.k_max = k_max
+        self.seed = seed
+
+    def config(self) -> dict:
+        return {"platform": self.platform, "k_max": self.k_max,
+                "seed": self.seed}
+
+    def prepare(self, program: Program) -> Artifacts:
+        t0 = time.time()
+        x = pka_features(program, self.platform)
+        return _artifacts(self, program, {"features": x},
+                          {"features_s": time.time() - t0})
+
+    def plan(self, program: Program, artifacts: Artifacts) -> SamplingPlan:
+        t0 = time.time()
+        labels, info = select_k_and_cluster(
+            np.asarray(artifacts.payload["features"]),
+            k_max=self.k_max, seed=self.seed)
+        plan = plan_from_labels(labels, _seqs(program), self.display_name,
+                                extra=info)
+        plan.extra["timings"] = dict(artifacts.timings,
+                                     cluster_s=time.time() - t0)
+        return plan
+
+
+@register_method
+class SieveMethod(SamplingMethod):
+    id = "sieve"
+    display_name = "Sieve"
+
+    def __init__(self, platform: str = "P1"):
+        self.platform = platform
+
+    def config(self) -> dict:
+        return {"platform": self.platform}
+
+    def prepare(self, program: Program) -> Artifacts:
+        t0 = time.time()
+        labels, ctas = sieve_partition(program, self.platform)
+        return _artifacts(self, program, {"labels": labels, "priority": ctas},
+                          {"partition_s": time.time() - t0})
+
+    def plan(self, program: Program, artifacts: Artifacts) -> SamplingPlan:
+        plan = plan_from_labels(
+            np.asarray(artifacts.payload["labels"]), _seqs(program),
+            self.display_name,
+            priority=np.asarray(artifacts.payload["priority"]))
+        plan.extra["timings"] = dict(artifacts.timings)
+        return plan
+
+
+@register_method
+class StemRootMethod(SamplingMethod):
+    id = "stem_root"
+    display_name = "STEM+ROOT"
+
+    def __init__(self, platform: str = "P1", eps: float = 0.25):
+        self.platform = platform
+        self.eps = eps
+
+    def config(self) -> dict:
+        return {"platform": self.platform, "eps": self.eps}
+
+    def prepare(self, program: Program) -> Artifacts:
+        t0 = time.time()
+        times = stem_root_times(program, self.platform)
+        return _artifacts(self, program, {"times": times},
+                          {"profile_s": time.time() - t0})
+
+    def plan(self, program: Program, artifacts: Artifacts) -> SamplingPlan:
+        names = [k.name for k in program.kernels]
+        labels, rep_selector = stem_root_partition(
+            np.asarray(artifacts.payload["times"]), names, self.eps)
+        plan = plan_from_labels(labels, _seqs(program), self.display_name,
+                                rep_selector=rep_selector)
+        plan.extra["timings"] = dict(artifacts.timings)
+        return plan

@@ -1,0 +1,284 @@
+"""Unified sampling API: registry round-trip over every method, artifact
+store save/load equality, the evaluate() harness pinned against
+hand-computed values, and the launch-grid results-JSON schema."""
+
+import numpy as np
+import pytest
+
+from repro.core.sampler import GCLSampler
+from repro.launch.sample import run_grid, validate_results
+from repro.sampling import (
+    ArtifactStore, Artifacts, available_methods, evaluate_metrics,
+    flatten_tree, get_method, plan_from_labels, program_fingerprint,
+    unflatten_tree,
+)
+from repro.sim.simulate import SamplingPlan
+from repro.sim.timing import KernelMetrics
+from repro.tracing.programs import get_program
+
+GCL_SMOKE = dict(steps=6, batch_size=4, cap_instr=48)
+
+
+def _method(method_id, **extra):
+    kwargs = dict(GCL_SMOKE) if method_id == "gcl" else {}
+    kwargs.update(extra)
+    return get_method(method_id, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# registry round-trip: every method -> valid plan on a small traced program
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_all_paper_methods():
+    assert available_methods() == ["gcl", "pka", "sieve", "stem_root"]
+
+
+def test_unknown_method_names_known_ones():
+    with pytest.raises(KeyError, match="sieve"):
+        get_method("nope")
+
+
+@pytest.mark.parametrize("method_id", ["gcl", "pka", "sieve", "stem_root"])
+def test_registry_round_trip_valid_plan(method_id):
+    prog = get_program("3mm")
+    plan, artifacts = _method(method_id).run(prog)
+    n = len(prog)
+    assert isinstance(plan, SamplingPlan)
+    assert plan.labels.shape == (n,)
+    clusters = set(np.unique(plan.labels).tolist())
+    assert set(plan.reps) == clusters
+    for c, reps in plan.reps.items():
+        assert reps, f"cluster {c} has no representative"
+        members = set(np.nonzero(plan.labels == c)[0].tolist())
+        assert set(reps) <= members
+    assert artifacts.method == method_id
+    assert artifacts.program == program_fingerprint(prog)
+
+
+# ---------------------------------------------------------------------------
+# shared plan_from_labels policies + legacy shims stay identical
+# ---------------------------------------------------------------------------
+
+def test_plan_from_labels_priority_and_selector():
+    labels = np.array([0, 0, 0, 1])
+    seqs = np.array([0, 1, 2, 3])
+    pri = np.array([1, 5, 5, 2])
+    p = plan_from_labels(labels, seqs, "m", priority=pri)
+    assert p.reps == {0: [1], 1: [3]}  # max priority, then min seq
+    p = plan_from_labels(labels, seqs, "m",
+                         rep_selector=lambda c, members: members[:2])
+    assert p.reps == {0: [0, 1], 1: [3]}
+    with pytest.raises(ValueError):
+        plan_from_labels(labels, seqs, "m", priority=pri,
+                         rep_selector=lambda c, m: m)
+
+
+@pytest.mark.parametrize("method_id", ["pka", "sieve", "stem_root"])
+def test_registry_matches_legacy_shims(method_id):
+    from repro.core.baselines import pka_plan, sieve_plan, stem_root_plan
+
+    legacy = {"pka": pka_plan, "sieve": sieve_plan,
+              "stem_root": stem_root_plan}[method_id]
+    prog = get_program("AlexNet")
+    plan, _ = _method(method_id).run(prog)
+    old = legacy(prog)
+    np.testing.assert_array_equal(plan.labels, old.labels)
+    assert plan.reps == old.reps
+    assert plan.method == old.method
+
+
+# ---------------------------------------------------------------------------
+# artifact store: save/load equality, content-hash replay
+# ---------------------------------------------------------------------------
+
+def test_tree_flatten_roundtrip():
+    tree = {
+        "embed": np.arange(6.0).reshape(2, 3),
+        "layers": [
+            {"w": np.ones((2, 2)), "b": np.zeros(2)},
+            {"w": np.full((2, 2), 3.0), "b": np.ones(2)},
+        ],
+    }
+    flat = flatten_tree(tree)
+    back = unflatten_tree(flat)
+    assert isinstance(back["layers"], list) and len(back["layers"]) == 2
+    np.testing.assert_array_equal(back["embed"], tree["embed"])
+    np.testing.assert_array_equal(back["layers"][1]["w"],
+                                  tree["layers"][1]["w"])
+
+
+def test_artifact_store_roundtrip(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    payload = {
+        "embeddings": np.random.default_rng(0).normal(size=(5, 8)),
+        "seqs": np.arange(5),
+        "params": {"proj": {"w": np.ones((3, 3))},
+                   "layers": [{"b": np.zeros(4)}]},
+    }
+    art = Artifacts(method="gcl", program="prog-abc", config_hash="cfg123",
+                    payload=payload, timings={"train_s": 1.5},
+                    meta={"note": "x"})
+    store.save(art)
+    assert store.has("gcl", art.key)
+    loaded = store.load("gcl", art.key)
+    assert loaded.method == "gcl" and loaded.config_hash == "cfg123"
+    assert loaded.timings == {"train_s": 1.5} and loaded.meta == {"note": "x"}
+    np.testing.assert_array_equal(loaded.payload["embeddings"],
+                                  payload["embeddings"])
+    np.testing.assert_array_equal(loaded.payload["params"]["layers"][0]["b"],
+                                  payload["params"]["layers"][0]["b"])
+    assert store.load("gcl", "missing-key") is None
+
+
+def test_store_replays_prepare(tmp_path):
+    """Second run() with a store must skip prepare() and reuse artifacts."""
+    store = ArtifactStore(str(tmp_path))
+    prog = get_program("3mm")
+    m1 = _method("pka")
+    plan1, art1 = m1.run(prog, store=store)
+
+    m2 = _method("pka")
+    calls = {"prepare": 0}
+    orig = m2.prepare
+
+    def counting_prepare(program):
+        calls["prepare"] += 1
+        return orig(program)
+
+    m2.prepare = counting_prepare
+    plan2, art2 = m2.run(prog, store=store)
+    assert calls["prepare"] == 0
+    np.testing.assert_array_equal(plan2.labels, plan1.labels)
+    assert plan2.reps == plan1.reps
+
+
+def test_gcl_cross_program_reuse_keys_provenance(tmp_path):
+    """An encoder trained on program A and reused for program B must store
+    B's artifacts under a key carrying A's fingerprint, so replayed results
+    never silently depend on store history / grid order."""
+    store = ArtifactStore(str(tmp_path))
+    m = _method("gcl")
+    prog_a, prog_b = get_program("3mm"), get_program("backprop")
+    _, art_a = m.run(prog_a, store=store)
+    assert art_a.provenance == ""  # self-trained
+    _, art_b = m.run(prog_b, store=store)
+    assert art_b.meta["encoder_reused"]
+    assert art_b.provenance == f"enc-{program_fingerprint(prog_a)}"
+    assert art_b.key == m.artifact_key(prog_b)  # lookup and save agree
+    assert store.has("gcl", art_b.key)
+    # a replaying instance adopts the SAME provenance for its next lookups
+    m2 = _method("gcl")
+    _, art_b2 = m2.run(prog_b, store=store)  # fresh instance: trains on B...
+    assert art_b2.provenance == ""           # ...so its key has none
+    assert art_b2.key != art_b.key           # the two artifacts coexist
+
+
+def test_plan_store_roundtrip(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    plan = SamplingPlan(labels=np.array([0, 0, 1]), reps={0: [0], 1: [2]},
+                        method="PKA", extra={"k": 2})
+    store.save_plan(plan, "pka", "key1")
+    loaded = store.load_plan("pka", "key1")
+    np.testing.assert_array_equal(loaded.labels, plan.labels)
+    assert loaded.reps == plan.reps and loaded.method == "PKA"
+    assert loaded.extra["k"] == 2
+    assert store.load_plan("pka", "other") is None
+
+
+# ---------------------------------------------------------------------------
+# evaluate(): golden values, hand-computed
+# ---------------------------------------------------------------------------
+
+def _metric(cycles, time_s, ipc, sim_time_s, hit):
+    return KernelMetrics(cycles=cycles, time_s=time_s, ipc=ipc, l1_hit=hit,
+                         l2_hit=hit, occupancy=hit, dram_bytes=0.0,
+                         sim_time_s=sim_time_s)
+
+
+def test_evaluate_golden():
+    metrics = [
+        _metric(100.0, 1.0, 1.0, 10.0, 0.5),
+        _metric(200.0, 2.0, 2.0, 20.0, 0.6),
+        _metric(300.0, 3.0, 3.0, 30.0, 0.7),
+    ]
+    plan = SamplingPlan(labels=np.array([0, 0, 1]), reps={0: [0], 1: [2]},
+                        method="test")
+    res = evaluate_metrics(plan, metrics, program="p", platform="P1")
+    # full: cycles 600, ipc cycle-weighted = (100*1+200*2+300*3)/600
+    assert res.full["cycles"] == pytest.approx(600.0)
+    assert res.full["ipc"] == pytest.approx(1400.0 / 600.0)
+    # sampled: rep 0 carries cluster 0's 2 invocations, rep 2 carries 1
+    # -> cycles 100*2 + 300*1 = 500; ipc = (1*200 + 3*300) / 500
+    assert res.sampled["cycles"] == pytest.approx(500.0)
+    assert res.sampled["ipc"] == pytest.approx(1100.0 / 500.0)
+    assert res.error_pct["cycles"] == pytest.approx(100.0 / 6.0)
+    assert res.error_pct["ipc"] == pytest.approx(
+        abs(1400 / 600 - 1100 / 500) / (1400 / 600) * 100.0)
+    # eq. 6: (1+2+3) / (1+3); §5.4 wall time 60 -> 40
+    assert res.speedup == pytest.approx(1.5)
+    assert res.sim_time_full_s == pytest.approx(60.0)
+    assert res.sim_time_sampled_s == pytest.approx(40.0)
+    assert res.sim_speedup == pytest.approx(1.5)
+    assert res.num_kernels == 3 and res.num_clusters == 2 and res.num_reps == 2
+
+
+def test_evaluate_multi_rep_cluster_exact():
+    """Two reps in one cluster split the cluster's weight evenly."""
+    metrics = [
+        _metric(100.0, 1.0, 1.0, 10.0, 0.5),
+        _metric(200.0, 2.0, 2.0, 20.0, 0.6),
+        _metric(300.0, 3.0, 3.0, 30.0, 0.7),
+    ]
+    plan = SamplingPlan(labels=np.zeros(3, int), reps={0: [0, 2]},
+                        method="test")
+    res = evaluate_metrics(plan, metrics)
+    # share 3/2 per rep: cycles (100 + 300) * 1.5 = 600 == full
+    assert res.sampled["cycles"] == pytest.approx(600.0)
+    assert res.error_pct["cycles"] == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------------------
+# GCLSampler hardening (satellite)
+# ---------------------------------------------------------------------------
+
+def test_embed_before_train_raises_with_hint():
+    s = GCLSampler()
+    with pytest.raises(RuntimeError, match="train"):
+        s.embed([])
+
+
+# ---------------------------------------------------------------------------
+# launch grid results JSON schema (fast: clustering-only methods)
+# ---------------------------------------------------------------------------
+
+def test_run_grid_results_schema(tmp_path):
+    doc = run_grid(["pka", "sieve"], ["3mm"], ["P1", "P2"],
+                   str(tmp_path), verbose=False)
+    validate_results(doc)
+    assert not doc["failures"]
+    assert len(doc["results"]) == 4  # 2 methods x 1 program x 2 platforms
+    row = doc["results"][0]
+    assert row["error_pct"]["cycles"] >= 0 and row["speedup"] > 0
+
+    import copy
+    bad = copy.deepcopy(doc)
+    bad["results"][0]["speedup"] = -1.0
+    with pytest.raises(ValueError, match="speedup"):
+        validate_results(bad)
+    bad = copy.deepcopy(doc)
+    bad["schema"] = "other/v0"
+    with pytest.raises(ValueError, match="schema"):
+        validate_results(bad)
+    bad = copy.deepcopy(doc)
+    del bad["results"][0]["error_pct"]
+    with pytest.raises(ValueError, match="error_pct"):
+        validate_results(bad)
+
+
+def test_run_grid_survives_broken_cell(tmp_path):
+    doc = run_grid(["pka"], ["no-such-program", "3mm"], ["P1"],
+                   str(tmp_path), verbose=False)
+    validate_results(doc)
+    assert len(doc["failures"]) == 1
+    assert "no-such-program" in doc["failures"][0]["cell"]
+    assert len(doc["results"]) == 1
