@@ -1,0 +1,121 @@
+"""Streaming vs materialized trace->graph ingestion on a scenario population.
+
+The streaming path (`repro.workloads.streaming`) holds at most one
+micro-batch of graphs resident while the materialized path builds every
+graph up front — on a scenario population the peak residency gap is the
+whole point (hundreds of programs cannot be materialized at once), and the
+content-hash cache keeps the streaming path's throughput competitive.
+
+    PYTHONPATH=src python -m benchmarks.bench_scenarios [--smoke]
+
+Writes benchmarks/results/scenarios[_suffix].json:
+  peak_resident_{graphs,nodes} for both paths, embed wall time, and the
+  residency-reduction factor.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import save_results
+from repro.core.rgcn import RGCNConfig
+from repro.core.sampler import GCLSampler, GCLSamplerConfig
+from repro.core.train import GCLTrainConfig
+from repro.workloads import (
+    ScenarioSpec, build_scenario, iter_program_graphs, materialized_peak,
+    scenario_families,
+)
+
+
+def scenario_population(smoke: bool):
+    phases, phase_len = (2, 6) if smoke else (3, 12)
+    seeds = (0,) if smoke else (0, 1)
+    return [
+        build_scenario(ScenarioSpec(f, seed=s, phases=phases,
+                                    phase_len=phase_len))
+        for f in scenario_families()
+        for s in seeds
+    ]
+
+
+def run(smoke: bool = False, verbose: bool = True):
+    programs = scenario_population(smoke)
+    cfg = GCLSamplerConfig(
+        cap_instr=48 if smoke else 96,
+        train=GCLTrainConfig(steps=6 if smoke else 40, batch_size=4),
+        rgcn=RGCNConfig(),
+    )
+    sampler = GCLSampler(cfg)
+    # one encoder for the whole population (the fit-once idiom)
+    sampler.train_stream(iter_program_graphs(programs[0], cfg.cap_warps,
+                                             cfg.cap_instr),
+                         n_total=len(programs[0]))
+
+    def all_graphs_iter():
+        for prog in programs:
+            yield from iter_program_graphs(prog, cfg.cap_warps, cfg.cap_instr)
+
+    t0 = time.time()
+    emb_stream = sampler.embed_stream(all_graphs_iter())
+    t_stream = time.time() - t0
+    stream_stats = dict(sampler.trainer.embed_stats)
+
+    sampler.trainer._embed_cache.clear()  # fair second pass
+    t0 = time.time()
+    graphs = list(all_graphs_iter())
+    mat_peak = materialized_peak(graphs)
+    emb_mat = sampler.embed(graphs)
+    t_mat = time.time() - t0
+
+    assert emb_stream.shape == emb_mat.shape
+    max_dev = float(np.abs(emb_stream - emb_mat).max())
+    residency_x = mat_peak["peak_resident_graphs"] / max(
+        stream_stats["peak_resident_graphs"], 1)
+    out = {
+        "programs": len(programs),
+        "invocations": int(emb_stream.shape[0]),
+        "stream": {
+            "time_s": t_stream,
+            "peak_resident_graphs": stream_stats["peak_resident_graphs"],
+            "peak_resident_nodes": stream_stats["peak_resident_nodes"],
+            "cache_hits": stream_stats["cache_hits"],
+            "microbatches": stream_stats["microbatches"],
+        },
+        "materialized": {
+            "time_s": t_mat,
+            "peak_resident_graphs": mat_peak["peak_resident_graphs"],
+            "peak_resident_nodes": mat_peak["peak_resident_nodes"],
+        },
+        "residency_reduction_x": residency_x,
+        "max_embedding_dev": max_dev,
+    }
+    if verbose:
+        print(f"population: {out['programs']} programs, "
+              f"{out['invocations']} invocations")
+        print(f"stream:       {t_stream:6.1f}s  peak graphs "
+              f"{stream_stats['peak_resident_graphs']:5d}  peak nodes "
+              f"{stream_stats['peak_resident_nodes']}")
+        print(f"materialized: {t_mat:6.1f}s  peak graphs "
+              f"{mat_peak['peak_resident_graphs']:5d}  peak nodes "
+              f"{mat_peak['peak_resident_nodes']}")
+        print(f"residency reduction: {residency_x:.1f}x  "
+              f"(max embedding dev {max_dev:.2e})")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_scenarios")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    out = run(smoke=args.smoke)
+    name = "scenarios_smoke" if args.smoke else "scenarios"
+    path = save_results(name, out)
+    print(f"results: {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

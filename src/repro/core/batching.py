@@ -234,6 +234,60 @@ def plan_microbatches(
     return bins
 
 
+def stream_bins(
+    items,
+    size_fn,
+    *,
+    max_nodes: int = MAX_NODES_PER_MICROBATCH,
+    max_edges: int = MAX_EDGES_PER_MICROBATCH,
+    max_graphs: int = MAX_GRAPHS_PER_MICROBATCH,
+    stats: dict | None = None,
+):
+    """Greedy micro-batch binning over an ITERATOR of items.
+
+    The streaming counterpart of `plan_microbatches`: items arrive one at a
+    time (no global size-sort is possible), are buffered until the packed
+    budgets would overflow, and each full bin is yielded before the next item
+    is buffered — so at most ONE bin of items is ever resident.  `size_fn`
+    maps an item to (n_nodes, n_edges); per-item sizes are clamped to the
+    budgets (oversized graphs are truncated downstream by `pack_graphs`).
+
+    When `stats` is given it accumulates: peak_resident_graphs /
+    peak_resident_nodes / peak_resident_edges — the TRUE (unclamped) sizes
+    of what is buffered, so a single oversized graph shows up honestly even
+    though the budget decision clamps it (truncation to the budget happens
+    downstream in `pack_graphs`) — and bins.
+    """
+    buf: list = []
+    bn = be = 0          # budget-clamped running sums (flush decision)
+    rn = re_ = 0         # true resident sums (stats)
+    peak_g = peak_n = peak_e = bins = 0
+    for item in items:
+        n, e = size_fn(item)
+        gn, ge = min(int(n), max_nodes), min(int(e), max_edges)
+        if buf and (bn + gn > max_nodes or be + ge > max_edges
+                    or len(buf) >= max_graphs):
+            bins += 1
+            yield buf
+            buf, bn, be, rn, re_ = [], 0, 0, 0, 0
+        buf.append(item)
+        bn += gn
+        be += ge
+        rn += int(n)
+        re_ += int(e)
+        peak_g = max(peak_g, len(buf))
+        peak_n = max(peak_n, rn)
+        peak_e = max(peak_e, re_)
+    if buf:
+        bins += 1
+        yield buf
+    if stats is not None:
+        stats.update(
+            peak_resident_graphs=peak_g, peak_resident_nodes=peak_n,
+            peak_resident_edges=peak_e, bins=bins,
+        )
+
+
 def graph_content_hash(g: KernelGraph) -> str:
     """Content hash of a kernel graph — identical repeated invocations hash
     equal, so the embedding cache encodes each distinct kernel once."""

@@ -229,6 +229,15 @@ def build_kernel_graph(traces: list[WarpTrace]) -> KernelGraph:
     )
 
 
+def iter_kernel_graphs(program, cap_warps: int = 2, cap_instr: int = 96):
+    """Lazily trace + build one HRG per invocation of a
+    `tracing.programs.Program` (duck-typed: anything with `.kernels` whose
+    items have `.trace`); nothing is retained between yields — the
+    streaming-ingestion primitive (see repro.workloads.streaming)."""
+    for k in program.kernels:
+        yield build_kernel_graph(k.trace(cap_warps, cap_instr))
+
+
 def pad_batch(graphs: list[KernelGraph], max_nodes=None, max_edges=None,
               max_warps=None):
     """Pad a list of KernelGraphs into dense batch arrays (jit-ready).

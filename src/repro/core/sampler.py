@@ -19,7 +19,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.clustering import select_k_and_cluster
-from repro.core.graphs import KernelGraph, build_kernel_graph
+from repro.core.graphs import KernelGraph, iter_kernel_graphs
 from repro.core.rgcn import RGCNConfig
 from repro.core.train import ContrastiveTrainer, GCLTrainConfig
 from repro.sampling.base import plan_from_labels  # noqa: F401  (compat shim)
@@ -45,11 +45,43 @@ class GCLSampler:
 
     # -- stages --------------------------------------------------------------
     def build_graphs(self, program: Program) -> list[KernelGraph]:
+        return list(self.iter_graphs(program))
+
+    def iter_graphs(self, program: Program):
+        """Lazy per-invocation trace + graph build (streaming ingestion:
+        nothing is retained between yields)."""
         c = self.cfg
-        return [
-            build_kernel_graph(k.trace(c.cap_warps, c.cap_instr))
-            for k in program.kernels
-        ]
+        return iter_kernel_graphs(program, c.cap_warps, c.cap_instr)
+
+    def train_stream(self, graphs_iter, n_total=None, verbose=False):
+        """Fit on a bounded subset of a graph ITERATOR without materializing
+        it.  When `n_total` is known (the Program case: one graph per
+        invocation), the subset is the SAME `rng.choice` draw as the
+        materialized `train(build_graphs(...))` path — streaming and
+        materialized ingestion then train the identical encoder.  Without
+        `n_total`, falls back to reservoir sampling (same cap, different
+        subset).  Either way at most `train_subsample` graphs are retained.
+        """
+        cap = self.cfg.train_subsample
+        rng = np.random.default_rng(self.cfg.train.seed)
+        if n_total is not None:
+            if n_total <= cap:
+                return self.train(list(graphs_iter), verbose=verbose)
+            # replicate train()'s selection exactly (indices AND order)
+            sel = rng.choice(n_total, cap, replace=False)
+            want = set(int(i) for i in sel)
+            picked = {i: g for i, g in enumerate(graphs_iter) if i in want}
+            # train() sees len == cap <= train_subsample: no re-subsampling
+            return self.train([picked[int(i)] for i in sel], verbose=verbose)
+        buf: list[KernelGraph] = []
+        for i, g in enumerate(graphs_iter):
+            if len(buf) < cap:
+                buf.append(g)
+            else:
+                j = int(rng.integers(0, i + 1))
+                if j < cap:
+                    buf[j] = g
+        return self.train(buf, verbose=verbose)
 
     def train(self, graphs: list[KernelGraph], verbose=False):
         rng = np.random.default_rng(self.cfg.train.seed)
@@ -71,6 +103,17 @@ class GCLSampler:
                 "pretrained params via repro.sampling's ArtifactStore replay"
             )
         return self.trainer.embed(self.params, graphs)
+
+    def embed_stream(self, graphs_iter) -> np.ndarray:
+        """Streaming `embed` over a graph iterator (see trainer.embed_stream);
+        peak resident graphs bounded by one micro-batch budget."""
+        if self.params is None:
+            raise RuntimeError(
+                "GCLSampler has no trained encoder: call train/train_stream "
+                "before embed_stream(), or adopt pretrained params via "
+                "repro.sampling's ArtifactStore replay"
+            )
+        return self.trainer.embed_stream(self.params, graphs_iter)
 
     def cluster(self, embeddings: np.ndarray, seqs: np.ndarray) -> SamplingPlan:
         labels, info = select_k_and_cluster(

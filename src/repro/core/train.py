@@ -32,6 +32,7 @@ from repro.core.augment import augment_view, augment_view_packed
 from repro.core.batching import (
     MAX_EDGES_PER_MICROBATCH, MAX_NODES_PER_MICROBATCH, bucket_key,
     bucket_size, graph_content_hash, pack_graphs, plan_microbatches,
+    stream_bins,
 )
 from repro.core.contrastive import info_nce
 from repro.core.graphs import KernelGraph, pad_batch
@@ -202,23 +203,70 @@ class ContrastiveTrainer:
         return state.params, info
 
     # -- inference ----------------------------------------------------------
+    def _embed_setup(self, params, n_cap, e_cap):
+        """Shared embed prologue: the content cache is valid only for the
+        (params, truncation caps) it was built with; the packed encode fn
+        is jit'd once."""
+        fp = f"{_params_fingerprint(params)}:{n_cap}:{e_cap}"
+        if fp != self._embed_cache_fp:
+            self._embed_cache.clear()
+            self._embed_cache_fp = fp
+        if self._embed_fn is None:
+            self._embed_fn = jax.jit(
+                lambda p, b: rgcn_mod.encode_packed(p, self.rc, b)
+            )
+        return self._embed_fn
+
+    def _encode_bin(self, fn, params, bin_graphs, n_cap, e_cap):
+        """Pack + encode one micro-batch.  Per-graph caps: a single graph
+        larger than the budget is truncated (with accounting) instead of
+        silently blowing the bucket past the Pallas kernel's VMEM budget.
+        Returns (embeddings row-per-graph, PackMeta, bucket key)."""
+        packed, meta = pack_graphs(
+            bin_graphs,
+            pad_graphs_to=bucket_size(len(bin_graphs), 8),
+            max_nodes_per_graph=n_cap, max_edges_per_graph=e_cap,
+        )
+        batch = {k: jnp.asarray(v) for k, v in packed.items()}
+        return np.asarray(fn(params, batch)), meta, bucket_key(packed)
+
+    def _embed_finish(self, label, hashes, fn, stats):
+        """Shared embed epilogue: assemble rows from the cache, warn on
+        truncation, FIFO-evict, publish `self.embed_stats`."""
+        if stats["trunc_nodes"] or stats["trunc_edges"]:
+            import warnings
+
+            warnings.warn(
+                f"{label} truncated {stats['trunc_nodes']} node(s) / "
+                f"{stats['trunc_edges']} edge(s) over the micro-batch "
+                f"budget; embeddings for the affected graphs are computed "
+                f"on truncated graphs",
+                stacklevel=3,
+            )
+        out = np.stack([self._embed_cache[h] for h in hashes]) if hashes \
+            else np.zeros((0, self.rc.dims[-1]), np.float32)
+        while len(self._embed_cache) > self.embed_cache_max:  # FIFO eviction
+            self._embed_cache.pop(next(iter(self._embed_cache)))
+        self.embed_stats = {
+            "graphs": len(hashes),
+            "compiles": _jit_cache_size(fn),
+            **stats,
+        }
+        return out
+
     def embed(self, params, graphs: list[KernelGraph], batch_size=64,
               max_nodes=None, max_edges=None) -> np.ndarray:
         """256-d kernel embeddings for all graphs (paper §3.4 uses z_k, not
         the projection head output).
 
-        Streaming micro-batched pass over size buckets with a content-hash
-        embedding cache: repeated kernel invocations (identical traces) are
-        encoded once; micro-batches are size-sorted so jit retraces stay
-        bounded by the bucket count.  Stats land in `self.embed_stats`.
+        Micro-batched pass over size buckets with a content-hash embedding
+        cache: repeated kernel invocations (identical traces) are encoded
+        once; micro-batches are size-sorted so jit retraces stay bounded by
+        the bucket count.  Stats land in `self.embed_stats`.
         """
         n_cap = max_nodes or MAX_NODES_PER_MICROBATCH
         e_cap = max_edges or MAX_EDGES_PER_MICROBATCH
-        # cache is valid only for (params, truncation caps) it was built with
-        fp = f"{_params_fingerprint(params)}:{n_cap}:{e_cap}"
-        if fp != self._embed_cache_fp:
-            self._embed_cache.clear()
-            self._embed_cache_fp = fp
+        fn = self._embed_setup(params, n_cap, e_cap)
 
         n = len(graphs)
         hashes = [graph_content_hash(g) for g in graphs]
@@ -228,13 +276,6 @@ class ContrastiveTrainer:
             if hsh not in self._embed_cache and hsh not in scheduled:
                 scheduled.add(hsh)
                 todo.append(i)
-        cache_hits = n - len(todo)
-
-        if self._embed_fn is None:
-            self._embed_fn = jax.jit(
-                lambda p, b: rgcn_mod.encode_packed(p, self.rc, b)
-            )
-        fn = self._embed_fn
 
         bucket_keys = set()
         trunc_nodes = trunc_edges = 0
@@ -244,47 +285,79 @@ class ContrastiveTrainer:
         )
         for bin_idx in bins:
             sel = [todo[j] for j in bin_idx]
-            # per-graph caps: a single graph larger than the micro-batch
-            # budget is truncated (with accounting) instead of silently
-            # blowing the bucket past the Pallas kernel's VMEM budget
-            packed, meta = pack_graphs(
-                [graphs[i] for i in sel],
-                pad_graphs_to=bucket_size(len(sel), 8),
-                max_nodes_per_graph=n_cap, max_edges_per_graph=e_cap,
-            )
+            z, meta, bkey = self._encode_bin(
+                fn, params, [graphs[i] for i in sel], n_cap, e_cap)
             trunc_nodes += int(meta.trunc_nodes.sum())
             trunc_edges += int(meta.trunc_edges.sum())
-            bucket_keys.add(bucket_key(packed))
-            batch = {k: jnp.asarray(v) for k, v in packed.items()}
-            z = np.asarray(fn(params, batch))
+            bucket_keys.add(bkey)
             for k, i in enumerate(sel):
                 self._embed_cache[hashes[i]] = z[k]
 
-        if trunc_nodes or trunc_edges:
-            import warnings
-
-            warnings.warn(
-                f"embed truncated {trunc_nodes} node(s) / {trunc_edges} "
-                f"edge(s) over the micro-batch budget "
-                f"(max_nodes={n_cap}, max_edges={e_cap}); embeddings for the "
-                f"affected graphs are computed on truncated graphs",
-                stacklevel=2,
-            )
-        out = np.stack([self._embed_cache[h] for h in hashes]) if n else \
-            np.zeros((0, self.rc.dims[-1]), np.float32)
-        while len(self._embed_cache) > self.embed_cache_max:  # FIFO eviction
-            self._embed_cache.pop(next(iter(self._embed_cache)))
-        self.embed_stats = {
-            "graphs": n,
-            "cache_hits": cache_hits,
+        return self._embed_finish("embed", hashes, fn, {
+            "cache_hits": n - len(todo),
             "encoded": len(todo),
             "microbatches": len(bins),
             "bucket_keys": sorted(bucket_keys),
-            "compiles": _jit_cache_size(fn),
             "trunc_nodes": trunc_nodes,
             "trunc_edges": trunc_edges,
-        }
-        return out
+        })
+
+    def embed_stream(self, params, graphs, batch_size=64, max_nodes=None,
+                     max_edges=None) -> np.ndarray:
+        """Streaming-iterator variant of `embed`: consumes ANY iterable of
+        KernelGraphs (e.g. `repro.workloads.iter_program_graphs`, which
+        traces lazily) holding at most one micro-batch of graphs resident.
+
+        Unlike `embed`, no global size-sort is possible (the stream is
+        consumed in arrival order), so distinct bucket keys may be slightly
+        higher; the content-hash cache and pow-2 buckets still apply.
+        Peak residency lands in `self.embed_stats` (the bound asserted by
+        tests/test_workloads.py).
+        """
+        n_cap = max_nodes or MAX_NODES_PER_MICROBATCH
+        e_cap = max_edges or MAX_EDGES_PER_MICROBATCH
+        fn = self._embed_setup(params, n_cap, e_cap)
+
+        order: list[str] = []          # content hash per input position
+        scheduled: set[str] = set()
+        cache_hits = 0
+
+        def pending():
+            nonlocal cache_hits
+            for g in graphs:
+                h = graph_content_hash(g)
+                order.append(h)
+                if h in self._embed_cache or h in scheduled:
+                    cache_hits += 1
+                    continue
+                scheduled.add(h)
+                yield (h, g)
+
+        bucket_keys = set()
+        trunc_nodes = trunc_edges = 0
+        stream_stats: dict = {}
+        for bin_items in stream_bins(
+                pending(), lambda hg: (hg[1].n_nodes, hg[1].n_edges),
+                max_nodes=n_cap, max_edges=e_cap, max_graphs=batch_size,
+                stats=stream_stats):
+            z, meta, bkey = self._encode_bin(
+                fn, params, [g for _, g in bin_items], n_cap, e_cap)
+            trunc_nodes += int(meta.trunc_nodes.sum())
+            trunc_edges += int(meta.trunc_edges.sum())
+            bucket_keys.add(bkey)
+            for k, (h, _) in enumerate(bin_items):
+                self._embed_cache[h] = z[k]
+
+        return self._embed_finish("embed_stream", order, fn, {
+            "cache_hits": cache_hits,
+            "encoded": len(scheduled),
+            "microbatches": stream_stats.pop("bins", 0),
+            "bucket_keys": sorted(bucket_keys),
+            "trunc_nodes": trunc_nodes,
+            "trunc_edges": trunc_edges,
+            "streaming": True,
+            **stream_stats,
+        })
 
     def embed_dense(self, params, graphs: list[KernelGraph], batch_size=64,
                     pad_shapes=None) -> np.ndarray:

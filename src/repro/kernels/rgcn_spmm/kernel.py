@@ -99,6 +99,8 @@ def rgcn_spmm_flat_fwd(h, src, dst, w, *, num_nodes, block_e=256,
     (E,) = src.shape
     P, D = h.shape
     nb = w.shape[-1]
+    if E == 0:  # empty edge list: aggregation is identically zero
+        return jnp.zeros((P, nb * D), jnp.float32)
     block_e = min(block_e, E)
     if E % block_e != 0:  # pad edges (w=0 rows are no-ops)
         pad = block_e - E % block_e
@@ -137,6 +139,8 @@ def rgcn_spmm_fwd(h, src, dst, w, *, num_nodes, block_e=256, interpret=False):
     B, E = src.shape
     _, N, D = h.shape
     nb = w.shape[-1]
+    if E == 0:  # empty edge list: aggregation is identically zero
+        return jnp.zeros((B, N, nb * D), jnp.float32)
     block_e = min(block_e, E)
     if E % block_e != 0:  # pad edges (w=0 rows are no-ops)
         pad = block_e - E % block_e

@@ -2,12 +2,18 @@
 
 Sweeps the full method x program x platform grid through the unified
 ``repro.sampling`` API and writes a machine-readable results JSON
-(schema ``repro.sampling.results/v1``) plus reusable artifacts/plans:
+(schema ``repro.sampling.results/v2``) plus reusable artifacts/plans:
 
   PYTHONPATH=src python -m repro.launch.sample \\
       --method gcl,pka,sieve,stem_root --programs nw,3mm \\
       --platforms P1,P2,P3 --out runs/table
   PYTHONPATH=src python -m repro.launch.sample --method gcl,pka --smoke
+  PYTHONPATH=src python -m repro.launch.sample --suite scenarios \\
+      --families iterative,pipeline,long_tail --scenario-seeds 0,1
+
+``--suite scenarios`` sweeps a seeded generated scenario matrix
+(repro.workloads) instead of the fixed paper table; rows carry the scenario
+``family`` and the doc gains a method x family ``family_summary``.
 
 Per the paper's cross-architecture protocol, clustering decisions are made
 once (on the method's decision platform, P1 by default) and the same plan
@@ -20,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import time
 
@@ -29,19 +36,29 @@ from repro.sampling import (
 from repro.sim.hardware import PLATFORMS
 from repro.sim.simulate import METRIC_NAMES, simulate_program
 from repro.tracing.programs import PAPER_PROGRAMS, get_program
+from repro.workloads import scenario_families, scenario_family_of, scenario_matrix
 
-RESULTS_SCHEMA = "repro.sampling.results/v1"
+RESULTS_SCHEMA = "repro.sampling.results/v2"
+SUITES = ("paper", "scenarios")
 SMOKE_PROGRAMS = ["3mm", "backprop"]
 SMOKE_GCL = dict(steps=10, batch_size=4, cap_instr=48)
+# scenario-suite smoke: 3 families x 1 seed, small phase sizes
+SMOKE_SCENARIOS = dict(families=("iterative", "pipeline", "long_tail"),
+                       seeds=(0,), phases=2, phase_len=6)
 
 
 def _method_kwargs(method_id: str, *, smoke: bool = False,
-                   gcl_steps: int = 0, seed: int = 0) -> dict:
+                   gcl_steps: int = 0, seed: int = 0,
+                   suite: str = "paper") -> dict:
     if method_id == "pka":
         return {"seed": seed} if seed else {}
     if method_id != "gcl":
         return {}  # sieve / stem_root are deterministic, no seed
     kw: dict = dict(SMOKE_GCL) if smoke else {}
+    if suite == "scenarios":
+        # generated populations flow through the bounded-memory
+        # trace->graph path regardless of per-program size
+        kw["streaming"] = True
     if gcl_steps:
         kw["steps"] = gcl_steps
     if seed:
@@ -49,9 +66,51 @@ def _method_kwargs(method_id: str, *, smoke: bool = False,
     return kw
 
 
+def split_programs(arg: str) -> list[str]:
+    """Split a comma-separated --programs list, keeping multi-field
+    scenario names intact: `scn:` spec fields are themselves
+    comma-separated (`scn:long_tail:seed=3,phase_len=24`), so a fragment
+    that is a bare `key=value` belongs to the preceding scenario name."""
+    from repro.workloads.spec import ScenarioSpec
+    from dataclasses import fields
+
+    spec_keys = tuple(f"{f.name}=" for f in fields(ScenarioSpec)
+                      if f.name != "family")
+    out: list[str] = []
+    for part in (p.strip() for p in arg.split(",") if p.strip()):
+        if out and out[-1].startswith("scn:") and part.startswith(spec_keys):
+            out[-1] += f",{part}"
+        else:
+            out.append(part)
+    return out
+
+
+def _family_summary(results: list[dict]) -> list[dict]:
+    """Aggregate method x scenario-family: mean cycles error, geometric-mean
+    speedup, cell count (the `--suite scenarios` headline table)."""
+    groups: dict[tuple, list[dict]] = {}
+    for row in results:
+        groups.setdefault((row["method_id"], row["family"]), []).append(row)
+    out = []
+    for (method_id, family), rows in sorted(groups.items()):
+        errs = [r["error_pct"]["cycles"] for r in rows]
+        spd = [r["speedup"] for r in rows]
+        out.append({
+            "method_id": method_id,
+            "family": family,
+            "cells": len(rows),
+            "mean_error_pct": float(sum(errs) / len(errs)),
+            "geomean_speedup": float(
+                math.exp(sum(math.log(max(s, 1e-12)) for s in spd) / len(spd))
+            ),
+        })
+    return out
+
+
 def run_grid(methods: list[str], programs: list[str], platforms: list[str],
              out_dir: str, *, smoke: bool = False, gcl_steps: int = 0,
-             seed: int = 0, verbose: bool = True) -> dict:
+             seed: int = 0, suite: str = "paper",
+             verbose: bool = True) -> dict:
     """Run every (method, program) cell once, evaluate on every platform."""
     store = ArtifactStore(os.path.join(out_dir, "artifacts"))
     results: list[dict] = []
@@ -69,7 +128,7 @@ def run_grid(methods: list[str], programs: list[str], platforms: list[str],
         method = get_method(
             method_id,
             **_method_kwargs(method_id, smoke=smoke, gcl_steps=gcl_steps,
-                             seed=seed))
+                             seed=seed, suite=suite))
         for program_name in programs:
             cell = f"{method_id} x {program_name}"
             try:
@@ -88,7 +147,8 @@ def run_grid(methods: list[str], programs: list[str], platforms: list[str],
                         program=program.name, platform=platform)
                     row = res.to_dict()
                     row.update(method_id=method_id, fit_s=fit_s,
-                               artifact_key=artifacts.key)
+                               artifact_key=artifacts.key,
+                               family=scenario_family_of(program_name))
                     results.append(row)
             except Exception as e:  # a broken cell must not kill the sweep
                 failures.append({"cell": cell, "error": f"{type(e).__name__}: {e}"})
@@ -98,9 +158,10 @@ def run_grid(methods: list[str], programs: list[str], platforms: list[str],
         "schema": RESULTS_SCHEMA,
         "created_unix": time.time(),
         "grid": {"methods": methods, "programs": programs,
-                 "platforms": platforms, "smoke": smoke},
+                 "platforms": platforms, "smoke": smoke, "suite": suite},
         "wall_time_s": time.time() - t_start,
         "results": results,
+        "family_summary": _family_summary(results),
         "failures": failures,
     }
 
@@ -118,13 +179,27 @@ def validate_results(doc: dict) -> None:
     for key in ("methods", "programs", "platforms"):
         if not isinstance(grid.get(key), list) or not grid[key]:
             fail(f"grid.{key} must be a non-empty list")
+    if grid.get("suite") not in SUITES:
+        fail(f"grid.suite must be one of {SUITES}")
     if not isinstance(doc.get("results"), list):
         fail("results must be a list")
     if not isinstance(doc.get("failures"), list):
         fail("failures must be a list")
+    if not isinstance(doc.get("family_summary"), list):
+        fail("family_summary must be a list")
+    for i, row in enumerate(doc["family_summary"]):
+        where = f"family_summary[{i}]"
+        for key in ("method_id", "family"):
+            if not isinstance(row.get(key), str) or not row[key]:
+                fail(f"{where}.{key} must be a non-empty string")
+        if not isinstance(row.get("cells"), int) or row["cells"] <= 0:
+            fail(f"{where}.cells must be a positive int")
+        for key in ("mean_error_pct", "geomean_speedup"):
+            if not isinstance(row.get(key), (int, float)) or row[key] < 0:
+                fail(f"{where}.{key} must be a number >= 0")
     for i, row in enumerate(doc["results"]):
         where = f"results[{i}]"
-        for key in ("method", "method_id", "program", "platform"):
+        for key in ("method", "method_id", "program", "platform", "family"):
             if not isinstance(row.get(key), str) or not row[key]:
                 fail(f"{where}.{key} must be a non-empty string")
         if row["method_id"] not in grid["methods"]:
@@ -150,12 +225,20 @@ def validate_results(doc: dict) -> None:
 
 
 def _print_table(doc: dict) -> None:
-    print(f"\n{'method':14s}{'program':10s}{'plat':>5s}{'K':>5s}{'reps':>6s}"
-          f"{'err %':>8s}{'speedup':>9s}")
+    wide = max([len(r["program"]) for r in doc["results"]] + [8]) + 2
+    print(f"\n{'method':14s}{'program':{wide}s}{'plat':>5s}{'K':>5s}"
+          f"{'reps':>6s}{'err %':>8s}{'speedup':>9s}")
     for row in doc["results"]:
-        print(f"{row['method']:14s}{row['program']:10s}{row['platform']:>5s}"
+        print(f"{row['method']:14s}{row['program']:{wide}s}"
+              f"{row['platform']:>5s}"
               f"{row['num_clusters']:5d}{row['num_reps']:6d}"
               f"{row['error_pct']['cycles']:8.2f}{row['speedup']:8.1f}x")
+    if doc["grid"].get("suite") == "scenarios" and doc["family_summary"]:
+        print(f"\n{'method':14s}{'family':14s}{'cells':>6s}"
+              f"{'mean err %':>12s}{'gm speedup':>12s}")
+        for s in doc["family_summary"]:
+            print(f"{s['method_id']:14s}{s['family']:14s}{s['cells']:6d}"
+                  f"{s['mean_error_pct']:12.2f}{s['geomean_speedup']:11.1f}x")
     if doc["failures"]:
         print(f"\n{len(doc['failures'])} cell(s) FAILED:")
         for f in doc["failures"]:
@@ -169,10 +252,21 @@ def main(argv=None) -> int:
     ap.add_argument("--method", default="all",
                     help="comma-separated method ids, or 'all' "
                          f"(known: {','.join(available_methods())})")
+    ap.add_argument("--suite", default="paper", choices=SUITES,
+                    help="program axis: the paper's fixed 11-program table, "
+                         "or a seeded generated scenario matrix "
+                         "(repro.workloads)")
     ap.add_argument("--programs", default="",
-                    help="comma-separated program names "
+                    help="comma-separated program names — overrides --suite "
                          "(default: smoke set with --smoke, else all paper "
-                         f"programs: {','.join(PAPER_PROGRAMS)})")
+                         f"programs: {','.join(PAPER_PROGRAMS)}; scenario "
+                         "specs like scn:pipeline:seed=1 also work)")
+    ap.add_argument("--families", default="",
+                    help="scenario families for --suite scenarios "
+                         f"(known: {','.join(scenario_families())}; "
+                         "default: smoke subset with --smoke, else all)")
+    ap.add_argument("--scenario-seeds", default="0",
+                    help="comma-separated spec seeds for --suite scenarios")
     ap.add_argument("--platforms", default="P1",
                     help=f"comma-separated platforms (known: "
                          f"{','.join(PLATFORMS)})")
@@ -193,7 +287,21 @@ def main(argv=None) -> int:
         if m not in available_methods():
             ap.error(f"unknown method {m!r}; known: {available_methods()}")
     if args.programs:
-        programs = [p.strip() for p in args.programs.split(",") if p.strip()]
+        programs = split_programs(args.programs)
+    elif args.suite == "scenarios":
+        families = [f.strip() for f in args.families.split(",") if f.strip()]
+        for f in families:
+            if f not in scenario_families():
+                ap.error(f"unknown family {f!r}; known: "
+                         f"{scenario_families()}")
+        seeds = tuple(int(s) for s in args.scenario_seeds.split(",") if s)
+        if args.smoke:
+            sm = dict(SMOKE_SCENARIOS)
+            programs = scenario_matrix(
+                families or sm["families"], seeds or sm["seeds"],
+                phases=sm["phases"], phase_len=sm["phase_len"])
+        else:
+            programs = scenario_matrix(families or None, seeds or (0,))
     else:
         programs = SMOKE_PROGRAMS if args.smoke else list(PAPER_PROGRAMS)
     platforms = [p.strip() for p in args.platforms.split(",") if p.strip()]
@@ -201,10 +309,12 @@ def main(argv=None) -> int:
         if p not in PLATFORMS:
             ap.error(f"unknown platform {p!r}; known: {list(PLATFORMS)}")
 
-    print(f"== sampling grid: {len(methods)} method(s) x {len(programs)} "
-          f"program(s) x {len(platforms)} platform(s) -> {args.out} ==")
+    print(f"== sampling grid [{args.suite}]: {len(methods)} method(s) x "
+          f"{len(programs)} program(s) x {len(platforms)} platform(s) "
+          f"-> {args.out} ==")
     doc = run_grid(methods, programs, platforms, args.out, smoke=args.smoke,
-                   gcl_steps=args.gcl_steps, seed=args.seed)
+                   gcl_steps=args.gcl_steps, seed=args.seed,
+                   suite=args.suite)
     validate_results(doc)
     os.makedirs(args.out, exist_ok=True)
     results_path = os.path.join(args.out, "results.json")

@@ -61,12 +61,20 @@ class GCLMethod(SamplingMethod):
     id = "gcl"
     display_name = "GCL-Sampler"
 
+    #: auto-streaming threshold: programs with at least this many
+    #: invocations use the bounded-memory trace->graph path by default
+    STREAM_THRESHOLD = 512
+
     def __init__(self, cfg: Optional[GCLSamplerConfig] = None, *,
                  steps: Optional[int] = None,
                  batch_size: Optional[int] = None,
                  cap_instr: Optional[int] = None,
                  k_max: Optional[int] = None,
-                 seed: Optional[int] = None):
+                 seed: Optional[int] = None,
+                 streaming: Optional[bool] = None):
+        #: None = auto (stream iff len(program) >= STREAM_THRESHOLD);
+        #: True/False force the streaming / materialized ingestion path
+        self.streaming = streaming
         cfg = cfg or GCLSamplerConfig()
         train_kw = {k: v for k, v in
                     [("steps", steps), ("batch_size", batch_size),
@@ -81,7 +89,12 @@ class GCLMethod(SamplingMethod):
         self._trained_on: Optional[str] = None  # program fp of the fit
 
     def config(self) -> dict:
-        return asdict(self.cfg)
+        return dict(asdict(self.cfg), streaming=self.streaming)
+
+    def _use_streaming(self, program: Program) -> bool:
+        if self.streaming is not None:
+            return self.streaming
+        return len(program) >= self.STREAM_THRESHOLD
 
     def _encoder_provenance(self, program_fp: str) -> str:
         """Non-empty when the encoder was fit on a DIFFERENT program: the
@@ -98,12 +111,20 @@ class GCLMethod(SamplingMethod):
         return f"{base}-{prov}" if prov else base
 
     def prepare(self, program: Program) -> Artifacts:
+        stream = self._use_streaming(program)
         t0 = time.time()
-        graphs = self.sampler.build_graphs(program)
+        graphs = None if stream else self.sampler.build_graphs(program)
         t1 = time.time()
-        meta: dict = {}
+        meta: dict = {"streaming": stream}
         if self.sampler.params is None:
-            info = self.sampler.train(graphs)
+            if stream:
+                # n_total makes the training subset identical to the
+                # materialized path: streaming changes memory, not results
+                info = self.sampler.train_stream(
+                    self.sampler.iter_graphs(program),
+                    n_total=len(program))
+            else:
+                info = self.sampler.train(graphs)
             self._trained_on = program_fingerprint(program)
             meta["train"] = {
                 k: info[k] for k in
@@ -114,7 +135,18 @@ class GCLMethod(SamplingMethod):
             meta["encoder_reused"] = True
         meta["trained_on"] = self._trained_on
         t2 = time.time()
-        emb = self.sampler.embed(graphs)
+        if stream:
+            # second lazy pass: graphs flow through pack/encode one
+            # micro-batch at a time (bounded peak residency; the
+            # content-hash cache de-dupes repeated invocations)
+            emb = self.sampler.embed_stream(self.sampler.iter_graphs(program))
+            meta["embed"] = {
+                k: v for k, v in self.sampler.trainer.embed_stats.items()
+                if k in ("cache_hits", "encoded", "microbatches",
+                         "peak_resident_graphs", "peak_resident_nodes")
+            }
+        else:
+            emb = self.sampler.embed(graphs)
         t3 = time.time()
         payload = {
             "params": self.sampler.params,

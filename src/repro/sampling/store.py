@@ -22,6 +22,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import re
 import shutil
 from typing import Any, Optional
 
@@ -35,11 +36,28 @@ _SEP = "/"
 
 
 def program_fingerprint(program: Program) -> str:
-    """Stable id for a traced program: name + kernel names + seq order."""
+    """Stable CONTENT id for a traced program.
+
+    Hashes name + per-kernel (name, seq, template, params, seed) + the
+    program's `fingerprint_extra` (generated programs put their
+    ScenarioSpec hash there).  Kernel names alone are not enough: two
+    generated programs can share every name while differing in params or
+    trace seed, and their artifacts must not collide in the store.
+    The human-readable prefix is sanitized for filesystem use (scenario
+    names contain ':' / '=' / ',').
+    """
     h = hashlib.sha1(program.name.encode())
     for k in program.kernels:
-        h.update(f"{k.name}:{k.seq};".encode())
-    return f"{program.name}-{h.hexdigest()[:10]}"
+        params = sorted(getattr(k, "params", {}).items())
+        h.update(
+            f"{k.name}:{k.seq}:{getattr(k, 'template', '')}"
+            f":{params}:{getattr(k, 'seed', '')};".encode()
+        )
+    extra = getattr(program, "fingerprint_extra", "")
+    if extra:
+        h.update(f"|{extra}".encode())
+    safe_name = re.sub(r"[^A-Za-z0-9_.-]", "_", program.name)
+    return f"{safe_name}-{h.hexdigest()[:10]}"
 
 
 # -- pytree <-> flat arrays ---------------------------------------------------

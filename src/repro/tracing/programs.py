@@ -29,11 +29,18 @@ from repro.utils.registry import Registry
 class Program:
     name: str
     kernels: list
+    # extra content folded into `program_fingerprint` — generated programs
+    # (repro.workloads) put their ScenarioSpec hash here so two same-named
+    # programs built from different specs/seeds never share artifact keys
+    fingerprint_extra: str = ""
 
     def __len__(self):
         return len(self.kernels)
 
 
+# name -> zero-arg builder; the paper suite registers below.  Generated
+# scenario programs need no registration: their `scn:` names resolve
+# lazily in get_program (the name IS the spec)
 PROGRAMS: Registry = Registry("program")
 
 
@@ -317,6 +324,8 @@ _BUILDERS = {
     "AlexNet": _build_alexnet, "qwen1.5": _build_qwen15,
     "phi-2": _build_phi2, "pythia": _build_pythia,
 }
+for _name, _builder in _BUILDERS.items():
+    PROGRAMS.add(_name, _builder)
 
 PAPER_PROGRAMS = list(_BUILDERS)
 
@@ -324,9 +333,18 @@ _cache: dict = {}
 
 
 def get_program(name: str) -> Program:
+    if name.startswith("scn:"):
+        # generated scenario programs (repro.workloads) resolve lazily: the
+        # name IS the spec, no pre-registration needed.  Deliberately NOT
+        # memoized — the scn: name space is open-ended (a large scenario
+        # matrix would pin every generated Program for the process
+        # lifetime) and build_scenario is cheap and deterministic.
+        from repro.workloads import scenario_program
+
+        return scenario_program(name)
     if name not in _cache:
-        if name in _BUILDERS:
-            _cache[name] = _BUILDERS[name]()
+        if name in PROGRAMS:
+            _cache[name] = PROGRAMS.get(name)()
         elif name.startswith("lm:"):
             _cache[name] = lm_program(name[3:])
         else:

@@ -1,0 +1,31 @@
+"""repro.workloads — scenario-diverse generated programs + streaming
+trace->graph ingestion.
+
+    from repro.workloads import ScenarioSpec, build_scenario, scenario_matrix
+
+    prog = build_scenario(ScenarioSpec("pipeline", seed=3))
+    names = scenario_matrix(["iterative", "long_tail"], seeds=(0, 1))
+
+Generated programs are addressable by name (``scn:<family>[:k=v,...]``)
+through ``repro.tracing.programs.get_program`` and the launch grid
+(``python -m repro.launch.sample --suite scenarios``).  See
+`repro.workloads.streaming` for the bounded-memory ingestion path.
+"""
+
+from repro.workloads.scenarios import (
+    FAMILIES, build_scenario, scenario_families, scenario_family_of,
+    scenario_matrix, scenario_program,
+)
+from repro.workloads.spec import (
+    SCN_PREFIX, ScenarioSpec, is_scenario_name, spec_from_name,
+)
+from repro.workloads.streaming import (
+    iter_program_graphs, materialized_peak, stream_pack,
+)
+
+__all__ = [
+    "FAMILIES", "SCN_PREFIX", "ScenarioSpec", "build_scenario",
+    "is_scenario_name", "iter_program_graphs", "materialized_peak",
+    "scenario_families", "scenario_family_of", "scenario_matrix",
+    "scenario_program", "spec_from_name", "stream_pack",
+]

@@ -1,0 +1,94 @@
+"""Golden regression for the evaluation pipeline: the checked-in
+tests/fixtures/golden_results.json was produced by the grid CLI
+(2 programs x 2 deterministic methods x P1).  Re-running the grid must
+reproduce it — schema AND values — within numeric tolerance, so the eq. 5
+error / eq. 6 speedup math, the reconstruction weighting, and the timing
+model cannot drift silently.
+
+Regenerate the fixture (ONLY after an intentional change to the math):
+
+    PYTHONPATH=src python - <<'EOF'
+    import json, tempfile
+    from repro.launch.sample import run_grid
+    doc = run_grid(["pka", "sieve"], ["3mm", "backprop"], ["P1"],
+                   tempfile.mkdtemp(), verbose=False)
+    with open("tests/fixtures/golden_results.json", "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    EOF
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.launch.sample import run_grid, validate_results
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "golden_results.json")
+# wall-clock / environment-dependent fields, not part of the golden contract
+IGNORE_KEYS = {"created_unix", "wall_time_s", "fit_s", "timings"}
+RTOL = 1e-6
+
+
+def _strip(obj):
+    if isinstance(obj, dict):
+        return {k: _strip(v) for k, v in sorted(obj.items())
+                if k not in IGNORE_KEYS}
+    if isinstance(obj, list):
+        return [_strip(v) for v in obj]
+    return obj
+
+
+def _assert_same(got, want, path="$"):
+    if isinstance(want, dict):
+        assert isinstance(got, dict), f"{path}: {type(got)} != dict"
+        assert set(got) == set(want), (
+            f"{path}: keys differ: +{set(got) - set(want)} "
+            f"-{set(want) - set(got)}")
+        for k in want:
+            _assert_same(got[k], want[k], f"{path}.{k}")
+    elif isinstance(want, list):
+        assert isinstance(got, list) and len(got) == len(want), \
+            f"{path}: length {len(got)} != {len(want)}"
+        for i, (g, w) in enumerate(zip(got, want)):
+            _assert_same(g, w, f"{path}[{i}]")
+    elif isinstance(want, bool) or not isinstance(want, (int, float)):
+        assert got == want, f"{path}: {got!r} != {want!r}"
+    else:  # numeric: tolerance comparison
+        assert got == pytest.approx(want, rel=RTOL, abs=1e-9), \
+            f"{path}: {got} != {want}"
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+def test_fixture_is_schema_valid(golden):
+    validate_results(golden)
+    assert not golden["failures"]
+    assert len(golden["results"]) == 4  # 2 methods x 2 programs x 1 platform
+
+
+def test_grid_reproduces_golden_results(tmp_path, golden):
+    doc = run_grid(golden["grid"]["methods"], golden["grid"]["programs"],
+                   golden["grid"]["platforms"], str(tmp_path), verbose=False)
+    validate_results(doc)
+    _assert_same(_strip(doc), _strip(golden))
+
+
+def test_golden_pins_the_paper_structure(golden):
+    """Sanity anchors: the fixture itself must encode the behaviors the
+    programs were designed to show (so a silently-regenerated fixture that
+    lost them would be caught in review)."""
+    rows = {(r["method_id"], r["program"]): r for r in golden["results"]}
+    # backprop: 2 singleton kernels with identical PKA features -> merged
+    assert rows[("pka", "backprop")]["num_clusters"] == 1
+    assert rows[("pka", "backprop")]["error_pct"]["cycles"] > 10.0
+    # sieve keys on names: distinct names -> every kernel its own stratum,
+    # zero error, no speedup
+    assert rows[("sieve", "3mm")]["num_reps"] == 9
+    assert rows[("sieve", "3mm")]["error_pct"]["cycles"] == pytest.approx(0.0)
+    assert rows[("sieve", "3mm")]["speedup"] == pytest.approx(1.0)

@@ -1,0 +1,249 @@
+"""Kernel-parity suite: every Pallas kernel (rgcn_spmm dense + flat-edge,
+kmeans_assign, flash_attention, ssd_scan) against its pure-jnp `ref.py`
+oracle in interpret mode, across odd / non-power-of-two shapes, empty-edge
+and single-node degenerate cases, and f32/bf16 dtypes.
+
+Complements tests/test_kernels.py (which pins the happy-path shapes); this
+file owns the shape/dtype boundary grid so kernel edits can't silently
+regress a case the standard shapes never exercise.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.kmeans_assign.ops import kmeans_assign
+from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+from repro.kernels.rgcn_spmm.ops import rgcn_message_agg, rgcn_message_agg_flat
+from repro.kernels.rgcn_spmm.ref import (
+    rgcn_message_agg_flat_ref, rgcn_message_agg_ref,
+)
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_sequential_ref
+
+F32, BF16 = jnp.float32, jnp.bfloat16
+
+
+def _tol(dtype):
+    return 1e-4 if dtype == F32 else 3e-2
+
+
+def _close(a, b, tol):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+# ---------------------------------------------------------------------------
+# rgcn_spmm — flat (packed-batch) variant
+# ---------------------------------------------------------------------------
+
+RGCN_FLAT_SHAPES = [
+    # (P, D, Q, nb, O) — odd / non-pow2 node+edge counts, Q < block_e,
+    # Q straddling a block boundary
+    (33, 8, 7, 2, 8),
+    (100, 16, 257, 3, 24),
+    (1, 4, 3, 2, 6),       # single node, self-loops only
+    (65, 8, 256, 2, 8),    # Q exactly one block
+]
+
+
+@pytest.mark.parametrize("P,D,Q,nb,O", RGCN_FLAT_SHAPES)
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_rgcn_flat_parity(P, D, Q, nb, O, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(10), 5)
+    h = jax.random.normal(ks[0], (P, D), dtype)
+    basis = jax.random.normal(ks[1], (nb, D, O), dtype)
+    src = jax.random.randint(ks[2], (Q,), 0, P)
+    dst = jax.random.randint(ks[3], (Q,), 0, P)
+    w = jax.random.normal(ks[4], (Q, nb), dtype)
+    out = rgcn_message_agg_flat(h, basis, src, dst, w, P, True)
+    ref = rgcn_message_agg_flat_ref(
+        h.astype(F32), basis.astype(F32), src, dst, w.astype(F32), P)
+    _close(out, ref, _tol(dtype))
+
+
+def test_rgcn_flat_empty_edges():
+    """Q = 0: the aggregation is identically zero (no division-by-zero in
+    the block padding)."""
+    h = jax.random.normal(jax.random.PRNGKey(0), (8, 4))
+    basis = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 6))
+    e = jnp.zeros((0,), jnp.int32)
+    out = rgcn_message_agg_flat(h, basis, e, e, jnp.zeros((0, 2)), 8, True)
+    assert out.shape == (8, 6)
+    _close(out, jnp.zeros((8, 6)), 1e-6)
+
+
+def test_rgcn_flat_masked_edges_are_noops():
+    """w = 0 rows (padding edges in the packed batch) contribute nothing —
+    the invariant the edge-bucket padding in core/batching.py relies on."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    P, D, nb, O = 16, 8, 2, 8
+    h = jax.random.normal(ks[0], (P, D))
+    basis = jax.random.normal(ks[1], (nb, D, O))
+    src = jax.random.randint(ks[2], (20,), 0, P)
+    dst = jax.random.randint(ks[3], (20,), 0, P)
+    w = jax.random.normal(ks[4], (20, nb))
+    base = rgcn_message_agg_flat(h, basis, src, dst, w, P, True)
+    srcp = jnp.concatenate([src, jnp.zeros(13, jnp.int32)])
+    dstp = jnp.concatenate([dst, jnp.zeros(13, jnp.int32)])
+    wp = jnp.concatenate([w, jnp.zeros((13, nb))])
+    padded = rgcn_message_agg_flat(h, basis, srcp, dstp, wp, P, True)
+    _close(base, padded, 1e-5)
+
+
+RGCN_DENSE_SHAPES = [
+    # (B, N, D, E, nb, O)
+    (1, 33, 8, 7, 2, 8),
+    (2, 1, 4, 3, 2, 6),    # single node per graph
+    (3, 17, 8, 130, 2, 12),
+]
+
+
+@pytest.mark.parametrize("B,N,D,E,nb,O", RGCN_DENSE_SHAPES)
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_rgcn_dense_parity(B, N, D, E, nb, O, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(12), 5)
+    h = jax.random.normal(ks[0], (B, N, D), dtype)
+    basis = jax.random.normal(ks[1], (nb, D, O), dtype)
+    src = jax.random.randint(ks[2], (B, E), 0, N)
+    dst = jax.random.randint(ks[3], (B, E), 0, N)
+    w = jax.random.normal(ks[4], (B, E, nb), dtype)
+    out = rgcn_message_agg(h, basis, src, dst, w, N, True)
+    ref = rgcn_message_agg_ref(
+        h.astype(F32), basis.astype(F32), src, dst, w.astype(F32), N)
+    _close(out, ref, _tol(dtype))
+
+
+def test_rgcn_dense_empty_edges():
+    h = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4))
+    basis = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 6))
+    e = jnp.zeros((2, 0), jnp.int32)
+    out = rgcn_message_agg(h, basis, e, e, jnp.zeros((2, 0, 2)), 8, True)
+    assert out.shape == (2, 8, 6)
+    _close(out, jnp.zeros((2, 8, 6)), 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# kmeans_assign
+# ---------------------------------------------------------------------------
+
+KMEANS_SHAPES = [
+    # (n, d, k, block_n)
+    (37, 19, 5, 16),       # odd everything, n % block != 0
+    (1, 7, 3, 512),        # single point
+    (9, 5, 1, 4),          # single centroid
+    (513, 33, 7, 512),     # one past the block boundary
+]
+
+
+@pytest.mark.parametrize("n,d,k,block_n", KMEANS_SHAPES)
+def test_kmeans_assign_parity(n, d, k, block_n):
+    ks = jax.random.split(jax.random.PRNGKey(20), 2)
+    x = jax.random.normal(ks[0], (n, d))
+    cent = jax.random.normal(ks[1], (k, d))
+    labels, dists = kmeans_assign(x, cent, block_n=block_n, interpret=True)
+    ref_labels, ref_dists = kmeans_assign_ref(x, cent)
+    np.testing.assert_array_equal(np.asarray(labels), np.asarray(ref_labels))
+    _close(dists, ref_dists, 1e-4)
+    assert labels.shape == (n,) and labels.dtype == jnp.int32
+
+
+def test_kmeans_assign_bf16_separated():
+    """bf16 inputs: argmin must stay exact when clusters are well separated
+    (ties under low precision would be a real regression)."""
+    rng = np.random.default_rng(0)
+    k, d, per = 4, 16, 25
+    cent = rng.normal(size=(k, d)).astype(np.float32) * 20.0
+    x = np.concatenate([cent[i] + rng.normal(size=(per, d)).astype(np.float32)
+                        for i in range(k)])
+    want = np.repeat(np.arange(k), per)
+    labels, _ = kmeans_assign(jnp.asarray(x, BF16), jnp.asarray(cent, BF16),
+                              block_n=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(labels), want)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+FLASH_ODD_SHAPES = [
+    # (B, S, K, G, hd, bq, bk) — non-pow2 head dims, rectangular blocks,
+    # single-block sequences
+    (1, 96, 1, 3, 48, 32, 48),
+    (2, 32, 2, 1, 24, 32, 32),   # S == block (single q and kv block)
+    (1, 192, 3, 2, 8, 64, 96),   # tiny head dim, rect blocks
+]
+
+
+@pytest.mark.parametrize("B,S,K,G,hd,bq,bk", FLASH_ODD_SHAPES)
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_flash_attention_parity_odd(B, S, K, G, hd, bq, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(30), 3)
+    q = jax.random.normal(ks[0], (B, S, K, G, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, hd), dtype)
+    out = flash_attention_fwd(q, k, v, scale=hd**-0.5, block_q=bq,
+                              block_k=bk, interpret=True)
+    ref = attention_ref(q, k, v, hd**-0.5)
+    _close(out, ref, 1e-5 if dtype == F32 else 3e-2)
+
+
+def test_flash_attention_single_query_row():
+    """S = 1 degenerate: causal attention over one position is the value
+    row itself."""
+    ks = jax.random.split(jax.random.PRNGKey(31), 3)
+    q = jax.random.normal(ks[0], (1, 1, 1, 1, 16))
+    k = jax.random.normal(ks[1], (1, 1, 1, 16))
+    v = jax.random.normal(ks[2], (1, 1, 1, 16))
+    out = flash_attention_fwd(q, k, v, scale=0.25, block_q=1, block_k=1,
+                              interpret=True)
+    _close(out[0, 0, 0, 0], v[0, 0, 0], 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+SSD_ODD_SHAPES = [
+    # (B, S, nh, hp, ds, Q)
+    (1, 48, 3, 12, 6, 16),   # odd heads / non-pow2 head dim
+    (2, 16, 1, 8, 4, 16),    # single chunk (S == Q)
+    (1, 96, 5, 4, 12, 32),   # many small heads
+]
+
+
+@pytest.mark.parametrize("B,S,nh,hp,ds,Q", SSD_ODD_SHAPES)
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_ssd_parity_odd(B, S, nh, hp, ds, Q, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(40), 5)
+    x = (jax.random.normal(ks[0], (B, S, nh, hp)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bc = (jax.random.normal(ks[3], (B, S, ds)) * 0.5).astype(dtype)
+    Cc = (jax.random.normal(ks[4], (B, S, ds)) * 0.5).astype(dtype)
+    y, final = ssd_scan(x, dt, A, Bc, Cc, Q, True)
+    ys, fs = ssd_sequential_ref(
+        x.astype(F32), dt.astype(F32), A, Bc.astype(F32), Cc.astype(F32))
+    tol = 1e-3 if dtype == F32 else 4e-2
+    _close(y, ys, tol)
+    _close(final, fs, tol)
+    assert y.dtype == dtype
+
+
+def test_ssd_zero_input_is_zero():
+    """x = 0 degenerate: state and output stay identically zero."""
+    B, S, nh, hp, ds = 1, 32, 2, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(41), 4)
+    x = jnp.zeros((B, S, nh, hp))
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[1], (nh,)) * 0.3)
+    Bc = jax.random.normal(ks[2], (B, S, ds))
+    Cc = jax.random.normal(ks[3], (B, S, ds))
+    y, final = ssd_scan(x, dt, A, Bc, Cc, 16, True)
+    _close(y, jnp.zeros_like(y), 1e-6)
+    _close(final, jnp.zeros_like(final), 1e-6)

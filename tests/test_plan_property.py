@@ -1,0 +1,119 @@
+"""Property-based tests for the generalized `plan_from_labels` policies:
+across random label vectors, seqs, priorities, and rep selectors —
+every cluster gets >=1 representative, reconstruction weights are
+non-negative and sum to the program's invocation total, and multi-rep
+plans never select out-of-range indices."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st
+
+from repro.sampling import plan_from_labels
+
+# a random labeling problem: n invocations, labels in [0, k)
+labelings = st.integers(2, 60).flatmap(
+    lambda n: st.tuples(
+        st.just(n),
+        st.lists(st.integers(0, 7), min_size=n, max_size=n),
+        st.integers(0, 10_000),
+    )
+)
+
+
+def _setup(n, raw_labels, seed):
+    rng = np.random.default_rng(seed)
+    labels = np.asarray(raw_labels)
+    seqs = rng.permutation(n)
+    return labels, seqs, rng
+
+
+def _check_reps_valid(plan, labels):
+    n = len(labels)
+    clusters = set(np.unique(labels).tolist())
+    assert set(plan.reps) == clusters
+    for c, reps in plan.reps.items():
+        assert len(reps) >= 1, f"cluster {c} got no representative"
+        members = set(np.nonzero(labels == c)[0].tolist())
+        assert set(reps) <= members, "rep outside its own cluster"
+        for r in reps:
+            assert 0 <= r < n, "rep index out of range"
+        assert reps == sorted(set(reps)), "reps must be sorted + unique"
+
+
+def _check_weights(plan, labels):
+    """Reconstruction weights (cluster count split across its reps) are
+    non-negative and total the program's invocation count."""
+    total = 0.0
+    for c, reps in plan.reps.items():
+        count = int(np.sum(labels == c))
+        share = count / len(reps)
+        assert share >= 0
+        total += share * len(reps)
+    assert total == pytest.approx(len(labels))
+
+
+@settings(max_examples=40, deadline=None)
+@given(labelings)
+def test_default_policy_invariants(case):
+    n, raw, seed = case
+    labels, seqs, _ = _setup(n, raw, seed)
+    plan = plan_from_labels(labels, seqs, "m")
+    _check_reps_valid(plan, labels)
+    _check_weights(plan, labels)
+    for c, (rep,) in plan.reps.items():
+        members = np.nonzero(labels == c)[0]
+        assert seqs[rep] == seqs[members].min(), \
+            "default rep must be the first invocation (min seq)"
+
+
+@settings(max_examples=40, deadline=None)
+@given(labelings)
+def test_priority_policy_invariants(case):
+    n, raw, seed = case
+    labels, seqs, rng = _setup(n, raw, seed)
+    priority = rng.integers(0, 5, size=n)
+    plan = plan_from_labels(labels, seqs, "m", priority=priority)
+    _check_reps_valid(plan, labels)
+    _check_weights(plan, labels)
+    for c, (rep,) in plan.reps.items():
+        members = np.nonzero(labels == c)[0]
+        pmax = priority[members].max()
+        assert priority[rep] == pmax, "rep must attain the max priority"
+        best = members[priority[members] == pmax]
+        assert seqs[rep] == seqs[best].min(), "min seq breaks priority ties"
+
+
+@settings(max_examples=40, deadline=None)
+@given(labelings, st.integers(1, 4))
+def test_multi_rep_selector_invariants(case, n_reps):
+    n, raw, seed = case
+    labels, seqs, rng = _setup(n, raw, seed)
+
+    def selector(cluster, members):
+        take = min(n_reps, len(members))
+        return rng.choice(members, size=take, replace=False)
+
+    plan = plan_from_labels(labels, seqs, "m", rep_selector=selector)
+    _check_reps_valid(plan, labels)
+    _check_weights(plan, labels)
+    for c, reps in plan.reps.items():
+        members = np.nonzero(labels == c)[0]
+        assert len(reps) == min(n_reps, len(members))
+
+
+@settings(max_examples=20, deadline=None)
+@given(labelings)
+def test_selector_duplicates_are_deduped(case):
+    """A selector returning the same index twice must not double-count it
+    (reps are a set; weights split over DISTINCT reps)."""
+    n, raw, seed = case
+    labels, seqs, _ = _setup(n, raw, seed)
+    plan = plan_from_labels(
+        labels, seqs, "m",
+        rep_selector=lambda c, members: [members[0], members[0]])
+    _check_reps_valid(plan, labels)
+    _check_weights(plan, labels)
+    for reps in plan.reps.values():
+        assert len(reps) == 1

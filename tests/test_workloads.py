@@ -1,0 +1,303 @@
+"""Scenario workload subsystem: spec round-trip + determinism, every family
+generates valid programs, streaming ingestion parity with bounded peak
+residency, generated-program store keys (spec/seed in the fingerprint), and
+the `--suite scenarios` grid path."""
+
+import numpy as np
+import pytest
+
+from repro.core.batching import stream_bins
+from repro.core.rgcn import RGCNConfig
+from repro.core.sampler import GCLSampler, GCLSamplerConfig
+from repro.core.train import GCLTrainConfig
+from repro.launch.sample import run_grid, validate_results
+from repro.sampling import get_method, program_fingerprint
+from repro.tracing.programs import Program, get_program
+from repro.tracing.templates import make_kernel
+from repro.workloads import (
+    ScenarioSpec, build_scenario, is_scenario_name, iter_program_graphs,
+    scenario_families, scenario_family_of, scenario_matrix, spec_from_name,
+    stream_pack,
+)
+
+SMALL = dict(phases=2, phase_len=4)
+
+
+# ---------------------------------------------------------------------------
+# spec round-trip + generation determinism
+# ---------------------------------------------------------------------------
+
+def test_spec_name_round_trip():
+    spec = ScenarioSpec("pipeline", seed=7, phases=4, phase_len=9, scale=1.5)
+    back = spec_from_name(spec.name)
+    assert back == spec
+    assert spec_from_name("scn:iterative") == ScenarioSpec("iterative")
+    assert is_scenario_name("scn:iterative") and not is_scenario_name("nw")
+
+
+def test_spec_name_round_trip_is_exact_for_floats():
+    """repr-based float serialization: name -> spec loses nothing, so
+    build_scenario(spec) and get_program(spec.name) agree for ANY scale."""
+    spec = ScenarioSpec("pipeline", scale=1.2345678901234567, skew=0.1 + 0.2)
+    back = spec_from_name(spec.name)
+    assert back == spec and back.content_hash() == spec.content_hash()
+
+
+def test_spec_canonicalizes_field_types():
+    """ScenarioSpec(scale=2) and ScenarioSpec(scale=2.0) are the SAME spec
+    (equal, same name, same content hash)."""
+    a, b = ScenarioSpec("mem_mix", scale=2), ScenarioSpec("mem_mix", scale=2.0)
+    assert a == b and a.name == b.name
+    assert a.content_hash() == b.content_hash()
+    assert isinstance(a.scale, float) and isinstance(a.seed, int)
+
+
+def test_spec_name_rejects_malformed():
+    with pytest.raises(ValueError):
+        spec_from_name("nw")
+    with pytest.raises(ValueError):
+        spec_from_name("scn:")
+    with pytest.raises(ValueError):
+        spec_from_name("scn:pipeline:bogus=1")
+    with pytest.raises(ValueError):
+        spec_from_name("scn:pipeline:family=x")
+
+
+@pytest.mark.parametrize("family", [
+    "iterative", "phase_shift", "mem_mix", "divergent", "pipeline",
+    "long_tail",
+])
+def test_family_generates_deterministic_program(family):
+    spec = ScenarioSpec(family, seed=3, **SMALL)
+    a, b = build_scenario(spec), build_scenario(spec)
+    assert len(a) > 0
+    assert [k.name for k in a.kernels] == [k.name for k in b.kernels]
+    assert [k.params for k in a.kernels] == [k.params for k in b.kernels]
+    assert [k.seq for k in a.kernels] == list(range(len(a)))
+    # every kernel traces + simulates (the two downstream consumers)
+    tr = a.kernels[0].trace(1, 32)
+    assert len(tr) >= 1 and len(tr[0].opcode) > 0
+    assert a.kernels[0].stats("P1").warp_instructions > 0
+
+
+def test_seeds_change_the_program():
+    s0 = build_scenario(ScenarioSpec("mem_mix", seed=0, **SMALL))
+    s1 = build_scenario(ScenarioSpec("mem_mix", seed=1, **SMALL))
+    assert (
+        [k.name for k in s0.kernels] != [k.name for k in s1.kernels]
+        or [k.params for k in s0.kernels] != [k.params for k in s1.kernels]
+    )
+
+
+def test_scenario_matrix_and_get_program():
+    names = scenario_matrix(["pipeline", "long_tail"], seeds=(0, 1),
+                            **SMALL)
+    assert len(names) == 4 and len(set(names)) == 4
+    prog = get_program(names[0])
+    assert prog.name == names[0] and len(prog) > 0
+    # scn: programs are rebuilt per call (the open-ended name space is not
+    # memoized) but deterministically identical
+    again = get_program(names[0])
+    assert [k.name for k in again.kernels] == [k.name for k in prog.kernels]
+    assert scenario_family_of(names[0]) == "pipeline"
+    assert scenario_family_of("nw") == "paper"
+    assert set(scenario_families()) >= {
+        "iterative", "phase_shift", "mem_mix", "divergent", "pipeline",
+        "long_tail",
+    }
+
+
+# ---------------------------------------------------------------------------
+# store keys: spec/seed must be part of the program fingerprint (regression)
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_differs_across_seeds_same_names():
+    """Two generated programs can share every kernel NAME while differing
+    only in seed/spec — their artifacts must not collide in the store."""
+    a = build_scenario(ScenarioSpec("pipeline", seed=0, **SMALL))
+    b = build_scenario(ScenarioSpec("pipeline", seed=1, **SMALL))
+    # the pipeline family reuses stage names across frames: same name list
+    assert [k.name for k in a.kernels] == [k.name for k in b.kernels]
+    assert program_fingerprint(a) != program_fingerprint(b)
+
+
+def test_fingerprint_sees_params_and_seed_not_just_names():
+    ka = [make_kernel("k", "gemm", {"M": 64, "N": 64, "K": 64}, 0, seed=1)]
+    kb = [make_kernel("k", "gemm", {"M": 64, "N": 64, "K": 128}, 0, seed=1)]
+    kc = [make_kernel("k", "gemm", {"M": 64, "N": 64, "K": 64}, 0, seed=2)]
+    fa = program_fingerprint(Program("p", ka))
+    assert fa != program_fingerprint(Program("p", kb))   # params differ
+    assert fa != program_fingerprint(Program("p", kc))   # trace seed differs
+    assert fa == program_fingerprint(Program("p", list(ka)))  # stable
+
+
+def test_fingerprint_is_filesystem_safe():
+    prog = build_scenario(ScenarioSpec("iterative", seed=2, **SMALL))
+    fp = program_fingerprint(prog)
+    assert "/" not in fp and ":" not in fp and "=" not in fp
+
+
+def test_generated_programs_get_distinct_artifact_keys(tmp_path):
+    from repro.sampling import ArtifactStore
+
+    store = ArtifactStore(str(tmp_path))
+    m = get_method("sieve")
+    a = build_scenario(ScenarioSpec("pipeline", seed=0, **SMALL))
+    b = build_scenario(ScenarioSpec("pipeline", seed=1, **SMALL))
+    _, art_a = m.run(a, store=store)
+    _, art_b = m.run(b, store=store)
+    assert art_a.key != art_b.key
+    assert store.has("sieve", art_a.key) and store.has("sieve", art_b.key)
+
+
+# ---------------------------------------------------------------------------
+# streaming ingestion: bounded residency + parity with the materialized path
+# ---------------------------------------------------------------------------
+
+def test_stream_bins_respects_budgets_and_tracks_peaks():
+    sizes = [(10, 5), (20, 40), (5, 5), (100, 1), (1, 100), (30, 30)]
+    stats: dict = {}
+    bins = list(stream_bins(iter(sizes), lambda s: s, max_nodes=40,
+                            max_edges=50, max_graphs=3, stats=stats))
+    assert [s for b in bins for s in b] == sizes       # order preserved
+    for b in bins:
+        assert len(b) <= 3
+        # budget invariant is on CLAMPED sizes (oversized items are
+        # truncated downstream by pack_graphs and always sit alone)
+        assert sum(min(n, 40) for n, _ in b) <= 40
+        assert sum(min(e, 50) for _, e in b) <= 50
+        if any(n > 40 for n, _ in b) or any(e > 50 for _, e in b):
+            assert len(b) == 1
+    assert stats["bins"] == len(bins)
+    assert stats["peak_resident_graphs"] <= 3
+    # stats report TRUE residency: the (100, 1) / (1, 100) oversized items
+    # show up unclamped
+    assert stats["peak_resident_nodes"] == 100
+    assert stats["peak_resident_edges"] == 100
+
+
+def test_stream_bins_peaks_within_budget_for_small_items():
+    """When no single item exceeds a budget, true residency IS bounded by
+    one bin's budget — the memory guarantee the streaming path advertises."""
+    sizes = [(10, 12), (20, 8), (5, 30), (30, 10), (15, 15)] * 4
+    stats: dict = {}
+    bins = list(stream_bins(iter(sizes), lambda s: s, max_nodes=40,
+                            max_edges=50, max_graphs=3, stats=stats))
+    assert sum(len(b) for b in bins) == len(sizes)
+    assert stats["peak_resident_nodes"] <= 40
+    assert stats["peak_resident_edges"] <= 50
+    assert stats["peak_resident_graphs"] <= 3
+
+
+def test_stream_pack_peak_residency_bounded_by_one_bucket():
+    """The acceptance-criterion assertion: streaming a whole scenario
+    program through pack_graphs never holds more than one micro-batch
+    budget's worth of graphs."""
+    prog = build_scenario(ScenarioSpec("long_tail", seed=0, phases=3,
+                                       phase_len=8))
+    max_nodes, max_edges, max_graphs = 2048, 4096, 16
+    stats: dict = {}
+    seen = 0
+    for batch, meta, graphs in stream_pack(
+            iter_program_graphs(prog, 1, 32), max_nodes=max_nodes,
+            max_edges=max_edges, max_graphs=max_graphs, stats=stats):
+        seen += meta.n_graphs
+        assert meta.n_graphs <= max_graphs
+        assert batch["node_mask"].sum() <= max_nodes
+    assert seen == len(prog)
+    assert 0 < stats["peak_resident_graphs"] <= max_graphs
+    assert stats["peak_resident_nodes"] <= max_nodes
+    # the stream never materialized the whole population at once
+    assert stats["peak_resident_graphs"] < len(prog)
+
+
+def _tiny_sampler():
+    return GCLSampler(GCLSamplerConfig(
+        cap_warps=1, cap_instr=32,
+        train=GCLTrainConfig(steps=4, batch_size=4)))
+
+
+def test_embed_stream_matches_materialized_embed():
+    prog = build_scenario(ScenarioSpec("long_tail", seed=1, **SMALL))
+    s = _tiny_sampler()
+    graphs = s.build_graphs(prog)
+    s.train(graphs)
+    dense = s.embed(graphs)
+    s.trainer._embed_cache.clear()
+    stream = s.embed_stream(s.iter_graphs(prog))
+    assert stream.shape == dense.shape
+    np.testing.assert_allclose(stream, dense, atol=1e-5)
+    st = s.trainer.embed_stats
+    assert st["streaming"] and st["graphs"] == len(prog)
+    assert st["peak_resident_graphs"] < max(len(prog), 2)
+
+
+def test_embed_stream_requires_trained_encoder():
+    s = _tiny_sampler()
+    with pytest.raises(RuntimeError, match="train"):
+        s.embed_stream(iter([]))
+
+
+def test_gcl_method_streaming_plan_matches_materialized():
+    prog = build_scenario(ScenarioSpec("pipeline", seed=0, **SMALL))
+    kw = dict(steps=4, batch_size=4, cap_instr=32)
+    plan_s, art_s = get_method("gcl", streaming=True, **kw).run(prog)
+    plan_m, art_m = get_method("gcl", streaming=False, **kw).run(prog)
+    np.testing.assert_array_equal(plan_s.labels, plan_m.labels)
+    assert plan_s.reps == plan_m.reps
+    assert art_s.meta["streaming"] and not art_m.meta["streaming"]
+    assert "peak_resident_graphs" in art_s.meta["embed"]
+    assert art_s.key != art_m.key  # streaming is part of the config hash
+
+
+# ---------------------------------------------------------------------------
+# the scenarios suite through the grid CLI path
+# ---------------------------------------------------------------------------
+
+def test_run_grid_scenarios_suite(tmp_path):
+    programs = scenario_matrix(["iterative", "mem_mix", "long_tail"],
+                               seeds=(0,), **SMALL)
+    doc = run_grid(["pka", "sieve"], programs, ["P1"], str(tmp_path),
+                   suite="scenarios", verbose=False)
+    validate_results(doc)
+    assert not doc["failures"]
+    assert len(doc["results"]) == 6  # 2 methods x 3 scenarios x 1 platform
+    assert {r["family"] for r in doc["results"]} == {
+        "iterative", "mem_mix", "long_tail"}
+    assert doc["grid"]["suite"] == "scenarios"
+    fams = {(s["method_id"], s["family"]) for s in doc["family_summary"]}
+    assert len(fams) == 6
+    for s in doc["family_summary"]:
+        assert s["cells"] == 1 and s["geomean_speedup"] > 0
+
+
+def test_split_programs_keeps_multi_field_scenario_names_intact():
+    from repro.launch.sample import split_programs
+
+    assert split_programs("nw,3mm") == ["nw", "3mm"]
+    assert split_programs("scn:long_tail:seed=3,phase_len=24") == \
+        ["scn:long_tail:seed=3,phase_len=24"]
+    assert split_programs("nw,scn:iterative:phases=2,phase_len=6,3mm") == \
+        ["nw", "scn:iterative:phases=2,phase_len=6", "3mm"]
+    assert split_programs("scn:pipeline,scn:mem_mix:seed=1,scale=2.0") == \
+        ["scn:pipeline", "scn:mem_mix:seed=1,scale=2.0"]
+
+
+def test_validate_results_rejects_missing_family(tmp_path):
+    doc = run_grid(["sieve"], ["3mm"], ["P1"], str(tmp_path), verbose=False)
+    validate_results(doc)
+    assert doc["results"][0]["family"] == "paper"
+    import copy
+
+    bad = copy.deepcopy(doc)
+    del bad["results"][0]["family"]
+    with pytest.raises(ValueError, match="family"):
+        validate_results(bad)
+    bad = copy.deepcopy(doc)
+    bad["grid"]["suite"] = "bogus"
+    with pytest.raises(ValueError, match="suite"):
+        validate_results(bad)
+    bad = copy.deepcopy(doc)
+    del bad["family_summary"]
+    with pytest.raises(ValueError, match="family_summary"):
+        validate_results(bad)
