@@ -114,6 +114,42 @@ class CheckpointManager:
         return path_str(path)
 
     # -- restore ---------------------------------------------------------------
+    def restore_tree(self, step: int | None = None):
+        """Rebuild a checkpoint WITHOUT an abstract pytree: the manifest's
+        '/'-joined key paths are re-nested into dicts (digit-only components
+        rebuild lists), so callers whose leaf SHAPES are unknown up front —
+        e.g. the training engine's growing metrics history — can restore.
+        Returns (tree, step)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        nest: dict = {}
+        for leaf in manifest["leaves"]:
+            arr = np.load(os.path.join(d, leaf["file"]))
+            parts = leaf["key"].split("/")
+            node = nest
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = arr
+
+        def rebuild(node):
+            if not isinstance(node, dict):
+                return node
+            # list levels (from tuple/list pytrees) flatten to contiguous
+            # digit keys 0..n-1; anything else — including dicts that merely
+            # HAVE digit string keys — stays a dict
+            if node and all(k.isdigit() for k in node) \
+                    and sorted(int(k) for k in node) == list(range(len(node))):
+                return [rebuild(node[str(i)]) for i in range(len(node))]
+            return {k: rebuild(v) for k, v in node.items()}
+
+        return rebuild(nest), step
+
     def restore(self, abstract_state, step: int | None = None, shardings=None):
         """Rebuild `abstract_state`'s pytree from disk.  With `shardings`
         (a matching pytree of NamedShardings for the CURRENT mesh) leaves are

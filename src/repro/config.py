@@ -188,6 +188,8 @@ class TrainConfig:
     total_steps: int = 1_000
     schedule: str = "cosine"             # paper: cosine annealing
     grad_clip: float = 1.0
+    loss_scale: float = 1.0              # static scale on low-precision grads
+                                         # (unscaled inside adamw_update)
     opt_dtype: str = "float32"           # bf16 moments for very large archs
     grad_compress: bool = False          # error-feedback int8 DP compression
     microbatch: int = 0                  # 0 = no gradient accumulation

@@ -46,9 +46,10 @@ def augment_view(rng, batch):
 
 
 def apply_feature_noise(rng, h, use_noise, sigma):
-    """Per-graph gated Gaussian feature noise (B,) gate."""
-    noise = sigma * jax.random.normal(rng, h.shape)
-    return h + noise * use_noise[:, None, None]
+    """Per-graph gated Gaussian feature noise (B,) gate.  Noise is drawn in
+    h's dtype so a bf16 compute policy stays bf16 through augmentation."""
+    noise = sigma * jax.random.normal(rng, h.shape, h.dtype)
+    return h + noise * use_noise.astype(h.dtype)[:, None, None]
 
 
 # ---------------------------------------------------------------------------
@@ -83,6 +84,7 @@ def augment_view_packed(rng, batch):
 
 
 def apply_feature_noise_packed(rng, h, use_noise, graph_id, sigma):
-    """Per-graph gated Gaussian feature noise on flat (P, D) features."""
-    noise = sigma * jax.random.normal(rng, h.shape)
-    return h + noise * jnp.take(use_noise, graph_id)[:, None]
+    """Per-graph gated Gaussian feature noise on flat (P, D) features.
+    Drawn in h's dtype (see `apply_feature_noise`)."""
+    noise = sigma * jax.random.normal(rng, h.shape, h.dtype)
+    return h + noise * jnp.take(use_noise, graph_id).astype(h.dtype)[:, None]

@@ -202,6 +202,84 @@ def pack_graphs(
     return batch, meta
 
 
+@dataclass(frozen=True)
+class EpochSegment:
+    """A maximal run of CONSECUTIVE training steps whose packed batches share
+    one bucket key, with the per-step batches stacked along a new leading
+    step axis — ready to become `jax.lax.scan` xs after one device upload.
+    Step order is preserved exactly (the optimizer state evolves
+    sequentially), so segments never reorder steps across bucket flips."""
+    start: int                     # first step (absolute index in the epoch)
+    stop: int                      # one past the last step
+    key: tuple                     # bucket_key shared by every step
+    batches: dict                  # field -> np.ndarray of shape (stop-start, ...)
+
+    def __len__(self) -> int:
+        return self.stop - self.start
+
+
+@dataclass(frozen=True)
+class EpochPlan:
+    """Host-side epoch schedule built by `plan_epoch` (DESIGN.md §4): every
+    step's batch packed up front, grouped into same-bucket segments.  The
+    trainer stages each segment to the device ONCE and drives it with a
+    compiled multi-step scan instead of a per-step pack -> upload -> sync
+    round-trip."""
+    n_steps: int
+    selections: np.ndarray         # (n_steps, batch_size) graph indices
+    segments: tuple                # EpochSegments covering [0, n_steps)
+    bucket_keys: tuple             # sorted distinct bucket keys
+    trunc_nodes: int               # total nodes truncated by per-graph caps
+
+
+def plan_epoch(
+    graphs: list[KernelGraph],
+    selections: np.ndarray,
+    *,
+    max_nodes_per_graph: int | None = None,
+    max_edges_per_graph: int | None = None,
+) -> EpochPlan:
+    """Pack every step of an epoch and group consecutive same-bucket steps.
+
+    `selections` is the (steps, batch_size) matrix of graph indices (one row
+    per training step, drawn ahead of time so the schedule is deterministic
+    given the seed — the resume protocol replays it exactly).  Bucketing
+    keeps the number of distinct stacked shapes — and hence scan compiles —
+    bounded by the bucket count, not the step count.
+    """
+    selections = np.asarray(selections)
+    steps = []
+    trunc_total = 0
+    for sel in selections:
+        packed, meta = pack_graphs(
+            [graphs[i] for i in sel],
+            max_nodes_per_graph=max_nodes_per_graph,
+            max_edges_per_graph=max_edges_per_graph,
+        )
+        trunc_total += int(meta.trunc_nodes.sum())
+        steps.append((bucket_key(packed), packed))
+
+    segments: list[EpochSegment] = []
+    start = 0
+    while start < len(steps):
+        key = steps[start][0]
+        stop = start + 1
+        while stop < len(steps) and steps[stop][0] == key:
+            stop += 1
+        stacked = {
+            f: np.stack([steps[t][1][f] for t in range(start, stop)])
+            for f in steps[start][1]
+        }
+        segments.append(EpochSegment(start=start, stop=stop, key=key,
+                                     batches=stacked))
+        start = stop
+    return EpochPlan(
+        n_steps=len(steps), selections=selections, segments=tuple(segments),
+        bucket_keys=tuple(sorted({k for k, _ in steps})),
+        trunc_nodes=trunc_total,
+    )
+
+
 def plan_microbatches(
     graphs: list[KernelGraph],
     *,

@@ -11,9 +11,14 @@ def l2_normalize(z, eps=1e-8):
 
 
 def info_nce(z1, z2, tau: float):
-    """z1, z2: (B, d) projected views.  Returns (loss, metrics)."""
-    z1 = l2_normalize(z1)
-    z2 = l2_normalize(z2)
+    """z1, z2: (B, d) projected views.  Returns (loss, metrics).
+
+    Always computed in f32: under a bf16 compute policy (core/precision.py)
+    the logits/softmax are the numerically sensitive part, so the views are
+    upcast here rather than in every caller.
+    """
+    z1 = l2_normalize(z1.astype(jnp.float32))
+    z2 = l2_normalize(z2.astype(jnp.float32))
     S = (z1 @ z2.T) / tau  # eq. 2
 
     def ce(S):  # eq. 3

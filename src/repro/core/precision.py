@@ -1,0 +1,69 @@
+"""Mixed-precision policy for the training stack (DESIGN.md §7).
+
+One explicit, hashable `Policy` object threads through the encoder
+(`core/rgcn.py`), the augmentations (`core/augment.py`), the InfoNCE loss
+(`core/contrastive.py`) and the optimizer (`optim/adamw.py`):
+
+- ``param_dtype``    master parameters (always float32 here: AdamW keeps
+                     f32 master copies regardless of compute dtype),
+- ``compute_dtype``  activation/message dtype inside the encoder layers
+                     (bf16 halves activation traffic on accelerators;
+                     LayerNorm statistics and the readout stay f32),
+- ``loss_scale``     static loss scaling for low-precision gradients: the
+                     trainer multiplies the loss before differentiation and
+                     ``adamw_update`` divides the gradients back out (the
+                     hook a dynamic scaler would plug into).
+
+The default policy is pure float32 and is numerically a no-op: every cast
+is an identity, so the f32 path is bit-identical to the pre-policy code.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Policy:
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    loss_scale: float = 1.0
+
+    @property
+    def compute(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def param(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cast_compute(self, x):
+        """Cast an activation to the compute dtype (identity under f32)."""
+        return x.astype(self.compute) if x.dtype != self.compute else x
+
+    def cast_f32(self, x):
+        """Upcast back to f32 for numerically sensitive reductions."""
+        return x.astype(jnp.float32) if x.dtype != jnp.float32 else x
+
+
+#: named presets, the registry-style surface used by configs and the CLI
+POLICIES = {
+    "f32": Policy(),
+    "bf16": Policy(compute_dtype="bfloat16"),
+    # bf16 compute with a static loss scale: the backward pass runs in the
+    # compute dtype, so small gradients benefit from scaling before the
+    # f32 master update unscales them
+    "bf16_scaled": Policy(compute_dtype="bfloat16", loss_scale=1024.0),
+}
+
+
+def get_policy(name) -> Policy:
+    """Resolve a policy by preset name (a `Policy` passes through)."""
+    if isinstance(name, Policy):
+        return name
+    if name not in POLICIES:
+        raise KeyError(f"unknown precision policy {name!r}; "
+                       f"known: {sorted(POLICIES)}")
+    return POLICIES[name]

@@ -19,13 +19,14 @@ sorted-edge blocked version of the same contraction.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graphs import NUM_RELATIONS
+from repro.core.precision import Policy
 from repro.distributed.sharding import constrain
 from repro.tracing.isa import NUM_OPCODES, PSEUDO_KINDS, VAR_KINDS
 
@@ -41,6 +42,10 @@ class RGCNConfig:
     feat_noise_sigma: float = 0.01
     use_pallas: bool = False          # dispatch rgcn_spmm kernel (interpret on CPU)
     message_dtype: str = "float32"    # 'bfloat16' halves message-passing traffic
+    #: mixed-precision policy (core/precision.py): activations run in
+    #: `policy.compute_dtype`, LayerNorm stats / readout / InfoNCE stay f32,
+    #: params stay f32 masters.  The default f32 policy is bit-neutral.
+    policy: Policy = field(default_factory=Policy)
     # ablation switches (benchmarks/bench_ablations.py)
     use_vstats: bool = True           # dynamic-value summary features
     relations_used: tuple = (0, 1, 2, 3)  # subset of edge relations
@@ -120,8 +125,12 @@ def _layer_epilogue(lp, rc: RGCNConfig, agg, h, node_mask, *, last, rng,
                     train):
     """Self-loop + LayerNorm + ReLU + dropout + node-mask, shared by the
     dense and packed layers (rank-agnostic) so the two paths cannot
-    silently diverge."""
-    out = agg + h @ lp["w0"] + lp["b"]
+    silently diverge.  Under a low-precision policy the self-loop matmul
+    runs in the compute dtype while the LayerNorm statistics are taken in
+    f32; the result is cast back down except for the last layer, whose
+    output feeds the f32 readout.  All casts are identities under f32."""
+    out = agg + h @ lp["w0"].astype(h.dtype) + lp["b"]
+    out = out.astype(jnp.float32)
     mu = out.mean(-1, keepdims=True)
     sig = out.var(-1, keepdims=True)
     out = (out - mu) * jax.lax.rsqrt(sig + 1e-5) * lp["ln_scale"] + lp["ln_bias"]
@@ -129,7 +138,15 @@ def _layer_epilogue(lp, rc: RGCNConfig, agg, h, node_mask, *, last, rng,
     if not last and train and rng is not None and rc.dropout > 0:
         keep = jax.random.bernoulli(rng, 1 - rc.dropout, out.shape)
         out = out * keep / (1 - rc.dropout)
-    return out * node_mask[..., None]
+    out = out * node_mask[..., None]
+    return out if last else rc.policy.cast_compute(out)
+
+
+def _message_dtype(rc: RGCNConfig):
+    """Messages run in the NARROWER of `message_dtype` and the policy's
+    compute dtype (f32 policy + f32 messages stays f32, bit-neutral)."""
+    mdt = jnp.dtype(rc.message_dtype)
+    return rc.policy.compute if rc.policy.compute.itemsize < mdt.itemsize else mdt
 
 
 def _rgcn_layer(lp, rc: RGCNConfig, h, batch, *, last, rng=None, train=False):
@@ -162,7 +179,7 @@ def _rgcn_layer(lp, rc: RGCNConfig, h, batch, *, last, rng=None, train=False):
         # applied ONCE per (node, basis) after aggregation, so the expensive
         # (D x O) matmul runs on (B,N,nb,D) instead of per-edge payloads and
         # the gather/scatter payload is D, not nb*O.
-        mdt = jnp.dtype(rc.message_dtype)
+        mdt = _message_dtype(rc)
         h_m = h.astype(mdt)
         h_src = jnp.take_along_axis(h_m, src[:, :, None], axis=1)  # (B,E,D)
         coef = jnp.take(lp["comb"], etype, axis=0)  # (B,E,nb)
@@ -186,12 +203,12 @@ def encode(p, rc: RGCNConfig, batch, max_warps: int, *, rng=None, train=False,
         rngs = jax.random.split(rng, len(rc.dims))
     else:
         rngs = [None] * len(rc.dims)
-    h = node_features(p, rc, batch)
+    h = rc.policy.cast_compute(node_features(p, rc, batch))
     if noise_gate is not None and rngs[-1] is not None:
         from repro.core.augment import apply_feature_noise
 
         h = apply_feature_noise(rngs[-1], h, noise_gate, rc.feat_noise_sigma)
-        h = h * batch["node_mask"][..., None]
+        h = h * batch["node_mask"].astype(h.dtype)[..., None]
     for li, lp in enumerate(p["layers"]):
         h = _rgcn_layer(
             lp, rc, h, batch, last=(li == len(p["layers"]) - 1),
@@ -247,7 +264,7 @@ def _rgcn_layer_packed(lp, rc: RGCNConfig, h, batch, *, last, rng=None,
             h, lp["basis"], src, dst, w, P, True,
         )
     else:
-        mdt = jnp.dtype(rc.message_dtype)
+        mdt = _message_dtype(rc)
         h_src = jnp.take(h.astype(mdt), src, axis=0)    # (Q,D)
         weighted = h_src[:, None, :] * w[..., None].astype(mdt)  # (Q,nb,D)
         s = jax.ops.segment_sum(weighted, dst, num_segments=P)   # (P,nb,D)
@@ -270,14 +287,14 @@ def encode_packed(p, rc: RGCNConfig, batch, *, rng=None, train=False,
         rngs = jax.random.split(rng, len(rc.dims))
     else:
         rngs = [None] * len(rc.dims)
-    h = node_features(p, rc, batch)                     # (P, 64)
+    h = rc.policy.cast_compute(node_features(p, rc, batch))  # (P, 64)
     if noise_gate is not None and rngs[-1] is not None:
         from repro.core.augment import apply_feature_noise_packed
 
         h = apply_feature_noise_packed(
             rngs[-1], h, noise_gate, batch["graph_id"], rc.feat_noise_sigma
         )
-        h = h * batch["node_mask"][:, None]
+        h = h * batch["node_mask"].astype(h.dtype)[:, None]
     for li, lp in enumerate(p["layers"]):
         h = _rgcn_layer_packed(
             lp, rc, h, batch, last=(li == len(p["layers"]) - 1),

@@ -53,7 +53,8 @@ class GCLSampler:
         c = self.cfg
         return iter_kernel_graphs(program, c.cap_warps, c.cap_instr)
 
-    def train_stream(self, graphs_iter, n_total=None, verbose=False):
+    def train_stream(self, graphs_iter, n_total=None, verbose=False,
+                     checkpoint_dir=None, resume=True):
         """Fit on a bounded subset of a graph ITERATOR without materializing
         it.  When `n_total` is known (the Program case: one graph per
         invocation), the subset is the SAME `rng.choice` draw as the
@@ -61,18 +62,22 @@ class GCLSampler:
         materialized ingestion then train the identical encoder.  Without
         `n_total`, falls back to reservoir sampling (same cap, different
         subset).  Either way at most `train_subsample` graphs are retained.
+        `checkpoint_dir`/`resume` thread through to the trainer's resume
+        protocol (core/train.py, DESIGN.md §6).
         """
         cap = self.cfg.train_subsample
         rng = np.random.default_rng(self.cfg.train.seed)
+        kw = dict(verbose=verbose, checkpoint_dir=checkpoint_dir,
+                  resume=resume)
         if n_total is not None:
             if n_total <= cap:
-                return self.train(list(graphs_iter), verbose=verbose)
+                return self.train(list(graphs_iter), **kw)
             # replicate train()'s selection exactly (indices AND order)
             sel = rng.choice(n_total, cap, replace=False)
             want = set(int(i) for i in sel)
             picked = {i: g for i, g in enumerate(graphs_iter) if i in want}
             # train() sees len == cap <= train_subsample: no re-subsampling
-            return self.train([picked[int(i)] for i in sel], verbose=verbose)
+            return self.train([picked[int(i)] for i in sel], **kw)
         buf: list[KernelGraph] = []
         for i, g in enumerate(graphs_iter):
             if len(buf) < cap:
@@ -81,16 +86,19 @@ class GCLSampler:
                 j = int(rng.integers(0, i + 1))
                 if j < cap:
                     buf[j] = g
-        return self.train(buf, verbose=verbose)
+        return self.train(buf, **kw)
 
-    def train(self, graphs: list[KernelGraph], verbose=False):
+    def train(self, graphs: list[KernelGraph], verbose=False,
+              checkpoint_dir=None, resume=True):
         rng = np.random.default_rng(self.cfg.train.seed)
         if len(graphs) > self.cfg.train_subsample:
             sel = rng.choice(len(graphs), self.cfg.train_subsample, replace=False)
             train_graphs = [graphs[i] for i in sel]
         else:
             train_graphs = graphs
-        self.params, info = self.trainer.fit(train_graphs, verbose=verbose)
+        self.params, info = self.trainer.fit(
+            train_graphs, verbose=verbose, checkpoint_dir=checkpoint_dir,
+            resume=resume)
         return info
 
     def embed(self, graphs: list[KernelGraph]) -> np.ndarray:

@@ -9,36 +9,70 @@ recompilation is bounded by the bucket count and no kernel pays for the
 batch-wide max size.  The dense `pad_batch` path is kept as `embed_dense`
 for parity tests and the batching benchmark baseline.
 
-Distribution: batches shard over the mesh's batch axes (the packed node axis
-carries the 'batch' logical name); the InfoNCE logits matrix z1 @ z2^T makes
-GSPMD all-gather the projected embeddings — global negatives across data
-shards (SimCLR-at-scale adaptation, DESIGN.md §3).
+Engine (DESIGN.md §4): the default ``engine='scan'`` pre-packs the whole
+epoch on the host (`core.batching.plan_epoch`), stages each same-bucket
+segment to the device once, and drives training with fixed-length
+`jax.lax.scan` chunks — donated `TrainState`, fold-in per-step RNG, per-step
+metrics accumulated on device and pulled to the host only at ``log_every``
+boundaries.  Compiled chunk executables are shared process-wide (keyed on
+the model/optimizer config), so repeated fits pay zero recompiles.  The
+pre-engine per-step Python loop survives as ``engine='python'``, a parity
+shim for tests and the benchmark baseline: it packs, uploads and syncs every
+step and re-jits per fit, exactly like the seed trainer.
+
+Resume (DESIGN.md §6): with ``checkpoint_dir`` the scan engine snapshots
+(TrainState, base RNG key, metrics history, step cursor) every
+``checkpoint_every`` steps through `repro.checkpoint.CheckpointManager`; an
+interrupted fit restarted with the same config replays the deterministic
+epoch plan and continues from the cursor BIT-EXACTLY (chunks are masked per
+step, so chunk boundaries never change the math).
+
+Distribution: batches shard over the mesh's batch axes (the packed
+node/edge/graph axes carry the 'batch' logical name — see
+`distributed.sharding.constrain_batch`); the InfoNCE logits matrix
+z1 @ z2^T makes GSPMD all-gather the projected embeddings — global
+negatives across data shards (SimCLR-at-scale adaptation, DESIGN.md §3).
 """
 
 from __future__ import annotations
 
+import dataclasses
+import functools
 import hashlib
 import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointManager
 from repro.config import TrainConfig
 from repro.core import rgcn as rgcn_mod
 from repro.core.augment import augment_view, augment_view_packed
 from repro.core.batching import (
     MAX_EDGES_PER_MICROBATCH, MAX_NODES_PER_MICROBATCH, bucket_key,
-    bucket_size, graph_content_hash, pack_graphs, plan_microbatches,
-    stream_bins,
+    bucket_size, graph_content_hash, pack_graphs, plan_epoch,
+    plan_microbatches, stream_bins,
 )
 from repro.core.contrastive import info_nce
 from repro.core.graphs import KernelGraph, pad_batch
 from repro.core.rgcn import RGCNConfig
-from repro.distributed.sharding import MeshRules, set_mesh_rules
+from repro.distributed.sharding import (
+    MeshRules, constrain_batch, set_mesh_rules,
+)
 from repro.optim import TrainState, adamw_init, apply_gradients
+
+#: fixed metric layout of a training step (the scan emits them as one
+#: (chunk, len(METRIC_KEYS)) device array; checkpoints store one column per key)
+METRIC_KEYS = ("loss", "nce_acc", "pos_sim", "neg_sim", "lr", "grad_norm")
+
+
+class FitInterrupted(RuntimeError):
+    """Raised by ``fit(interrupt_after=k)`` right after the checkpoint at the
+    first chunk boundary >= k — the hook tests/CI use to simulate a killed
+    training job without killing the process."""
 
 
 @dataclass(frozen=True)
@@ -49,11 +83,109 @@ class GCLTrainConfig:
     val_fraction: float = 0.2
     log_every: int = 50
     seed: int = 0
+    #: 'scan' = compiled device-resident epochs (default);
+    #: 'python' = the pre-engine per-step loop, kept as a parity shim
+    engine: str = "scan"
+    #: scan chunk length (fixed per fit: chunks shorter than this are padded
+    #: with masked no-op steps, so ONE executable per bucket serves any step
+    #: count).  Effective length is min(scan_chunk, next_pow2(steps)).
+    scan_chunk: int = 32
+    #: snapshot (state, rng, history, cursor) every N steps (0 = off;
+    #: scan engine only) — cadence is rounded up to chunk boundaries
+    checkpoint_every: int = 0
     opt: TrainConfig = field(
         default_factory=lambda: TrainConfig(
             learning_rate=7e-4, weight_decay=0.01, warmup_steps=20,
             total_steps=120, schedule="cosine", grad_clip=1.0,
         )
+    )
+
+
+# ---------------------------------------------------------------------------
+# Loss (shared by both engines so they cannot diverge mathematically)
+# ---------------------------------------------------------------------------
+
+
+def packed_loss(params, rc: RGCNConfig, tau: float, batch, rng, *,
+                train: bool = True):
+    """Packed-batch InfoNCE.  The graph axis is exact (G == batch size), so
+    the logits matrix never sees padding graphs.
+
+    ``train=True``: stochastic augs + feature-noise gates, dropout on.
+    ``train=False`` (validation): augmentations drawn from the CALLER'S rng
+    (pass a fixed key for deterministic "fixed augs"), no feature noise, no
+    dropout — the eval-mode path `fit` uses for ``val_loss``/``val_acc``.
+    """
+    if train:
+        r1, r2, rp1, rp2 = jax.random.split(rng, 4)
+        v1, noise1 = augment_view_packed(r1, batch)
+        v2, noise2 = augment_view_packed(r2, batch)
+        z1 = rgcn_mod.encode_packed(params, rc, v1, rng=r1, train=True,
+                                    noise_gate=noise1)
+        z2 = rgcn_mod.encode_packed(params, rc, v2, rng=r2, train=True,
+                                    noise_gate=noise2)
+        p1 = rgcn_mod.project(params, rc, z1, rng=rp1, train=True)
+        p2 = rgcn_mod.project(params, rc, z2, rng=rp2, train=True)
+    else:
+        r1, r2 = jax.random.split(rng)
+        v1, _ = augment_view_packed(r1, batch)
+        v2, _ = augment_view_packed(r2, batch)
+        z1 = rgcn_mod.encode_packed(params, rc, v1)
+        z2 = rgcn_mod.encode_packed(params, rc, v2)
+        p1 = rgcn_mod.project(params, rc, z1)
+        p2 = rgcn_mod.project(params, rc, z2)
+    return info_nce(p1, p2, tau)
+
+
+class EngineFns(NamedTuple):
+    """Compiled training-engine entry points (one cache entry per
+    (RGCNConfig, TrainConfig, tau, MeshRules) — shared across trainer
+    instances and fits, so refits never recompile)."""
+    scan: callable     # jit (state, stacked batch, keys, live) -> (state, ys)
+    step: callable     # UNJITTED single step (the python shim jits per fit)
+    eval_loss: callable  # jit (params, batch, rng) -> (loss, metrics)
+
+
+@functools.lru_cache(maxsize=64)
+def _engine_fns(rc: RGCNConfig, opt: TrainConfig, tau: float,
+                rules: Optional[MeshRules]) -> EngineFns:
+    scale = rc.policy.loss_scale
+
+    def step(state: TrainState, batch, rng):
+        batch = constrain_batch(batch, rules)
+
+        def lossf(p):
+            loss, metrics = packed_loss(p, rc, tau, batch, rng, train=True)
+            # loss-scale hook (precision policy): differentiate the scaled
+            # loss; adamw_update unscales via opt.loss_scale.  scale == 1.0
+            # multiplies by exactly 1.0 — bit-neutral.
+            return loss * scale, (loss, metrics)
+
+        (_, (loss, metrics)), grads = jax.value_and_grad(
+            lossf, has_aux=True)(state.params)
+        state, opt_metrics = apply_gradients(state, grads, opt)
+        return state, dict(metrics, loss=loss, **opt_metrics)
+
+    def chunk(state: TrainState, stacked, keys, live):
+        """One fixed-length scan segment.  `live` masks padded / already-done
+        steps: a dead step still computes (fixed shapes) but its state update
+        and metrics are discarded, which makes chunk boundaries — and hence
+        resume points — bit-neutral."""
+
+        def body(st, xs):
+            batch, k, lv = xs
+            new_st, m = step(st, batch, k)
+            st = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(lv, new, old), new_st, st)
+            return st, jnp.stack([m[x] for x in METRIC_KEYS])
+
+        return jax.lax.scan(body, state, (stacked, keys, live))
+
+    return EngineFns(
+        scan=jax.jit(chunk, donate_argnums=(0,)),
+        step=step,
+        eval_loss=jax.jit(
+            lambda p, b, r: packed_loss(p, rc, tau, b, r, train=False)),
     )
 
 
@@ -63,7 +195,6 @@ class ContrastiveTrainer:
         self.rc = rc
         self.tc = tc
         self.mesh_rules = mesh_rules
-        self._step_fn = None
         self._embed_fn = None          # packed jit'd encode
         self._embed_fn_dense = None    # dense-path jit cache (per max_warps)
         self._embed_cache: dict[str, np.ndarray] = {}
@@ -72,6 +203,26 @@ class ContrastiveTrainer:
         self.embed_stats: dict = {}
 
     # -- loss ---------------------------------------------------------------
+    @property
+    def _opt(self) -> TrainConfig:
+        """Optimizer config with the precision policy's loss scale threaded
+        through.  The policy is the ONE source of truth for this trainer —
+        a conflicting explicit `opt.loss_scale` is rejected rather than
+        silently overridden."""
+        if self.tc.opt.loss_scale == self.rc.policy.loss_scale:
+            return self.tc.opt
+        if self.tc.opt.loss_scale != 1.0:
+            raise ValueError(
+                f"conflicting loss scales: TrainConfig.loss_scale="
+                f"{self.tc.opt.loss_scale} vs policy.loss_scale="
+                f"{self.rc.policy.loss_scale}; set it on the precision "
+                f"policy (RGCNConfig.policy) only")
+        return dataclasses.replace(
+            self.tc.opt, loss_scale=self.rc.policy.loss_scale)
+
+    def _engine(self) -> EngineFns:
+        return _engine_fns(self.rc, self._opt, self.tc.tau, self.mesh_rules)
+
     def _loss(self, params, batch, max_warps, rng):
         """Dense-batch InfoNCE (kept for parity tests / benchmarks)."""
         r1, r2, rp1, rp2 = jax.random.split(rng, 4)
@@ -85,30 +236,22 @@ class ContrastiveTrainer:
         p2 = rgcn_mod.project(params, self.rc, z2, rng=rp2, train=True)
         return info_nce(p1, p2, self.tc.tau)
 
-    def _loss_packed(self, params, batch, rng):
-        """Packed-batch InfoNCE.  The graph axis is exact (G == batch size),
-        so the logits matrix never sees padding graphs."""
-        r1, r2, rp1, rp2 = jax.random.split(rng, 4)
-        v1, noise1 = augment_view_packed(r1, batch)
-        v2, noise2 = augment_view_packed(r2, batch)
-        z1 = rgcn_mod.encode_packed(params, self.rc, v1, rng=r1,
-                                    train=True, noise_gate=noise1)
-        z2 = rgcn_mod.encode_packed(params, self.rc, v2, rng=r2,
-                                    train=True, noise_gate=noise2)
-        p1 = rgcn_mod.project(params, self.rc, z1, rng=rp1, train=True)
-        p2 = rgcn_mod.project(params, self.rc, z2, rng=rp2, train=True)
-        return info_nce(p1, p2, self.tc.tau)
+    def _loss_packed(self, params, batch, rng, *, train=True):
+        """Back-compat wrapper over the module-level `packed_loss`."""
+        return packed_loss(params, self.rc, self.tc.tau, batch, rng,
+                           train=train)
 
-    def _make_step(self):
-        tc = self.tc
+    def _make_step(self, max_warps=None):
+        """Seed-faithful per-fit jit of one training step (the python shim's
+        executable; `max_warps` is accepted for old callers and ignored).
+        A FRESH closure is built per call — like the seed trainer, every fit
+        re-traces and re-compiles (jax would otherwise reuse the executable
+        cached on the shared engine callable, which is exactly the
+        amortization the scan engine claims and the baseline must not get)."""
+        raw = self._engine().step
 
-        def step(state: TrainState, batch, rng):
-            (loss, metrics), grads = jax.value_and_grad(
-                lambda p: self._loss_packed(p, batch, rng), has_aux=True
-            )(state.params)
-            state, opt_metrics = apply_gradients(state, grads, tc.opt)
-            metrics = dict(metrics, loss=loss, **opt_metrics)
-            return state, metrics
+        def step(state, batch, rng):
+            return raw(state, batch, rng)
 
         return jax.jit(step, donate_argnums=(0,))
 
@@ -119,9 +262,20 @@ class ContrastiveTrainer:
         batch, max_warps = pad_batch(graphs, *(pad_to or (None, None, None)))
         return batch, max_warps
 
-    def fit(self, graphs: list[KernelGraph], verbose=False):
+    # -- fit -----------------------------------------------------------------
+    def fit(self, graphs: list[KernelGraph], verbose=False, *,
+            checkpoint_dir: Optional[str] = None, resume: bool = True,
+            interrupt_after: Optional[int] = None):
         """Train on an 80/20 split of the program's kernels; returns
-        (params, history)."""
+        (params, info).
+
+        ``checkpoint_dir`` (scan engine only) enables the resume protocol:
+        snapshots every ``tc.checkpoint_every`` steps; when the directory
+        already holds a snapshot and ``resume`` is True, training continues
+        from its cursor instead of refitting.  ``interrupt_after=k`` raises
+        :class:`FitInterrupted` after the checkpoint at the first chunk
+        boundary >= k (test/CI hook).
+        """
         tc, rc = self.tc, self.rc
         rng_np = np.random.default_rng(tc.seed)
         n = len(graphs)
@@ -131,14 +285,20 @@ class ContrastiveTrainer:
         val_idx = perm[:n_val]
 
         key = jax.random.PRNGKey(tc.seed)
-        key, k_init = jax.random.split(key)
+        base_key, k_init = jax.random.split(key)
         params = rgcn_mod.init_rgcn(k_init, rc)
-        state = adamw_init(params, tc.opt)
-        step_fn = self._make_step()
+        state = adamw_init(params, self._opt)
 
-        history = []
-        bucket_keys = set()
-        trunc_nodes = 0
+        # the whole epoch's batch selections, drawn up front with the SAME
+        # rng stream the per-step loop used — deterministic given the seed,
+        # which is what makes the resume replay exact
+        bs = min(tc.batch_size, len(train_idx))
+        selections = np.stack([
+            train_idx[rng_np.choice(len(train_idx), size=bs,
+                                    replace=len(train_idx) < bs)]
+            for _ in range(tc.steps)
+        ]) if tc.steps else np.zeros((0, bs), np.int64)
+
         # per-graph caps bound each graph's footprint (and the bucket blowup
         # a pathological graph would cause); with use_pallas the WHOLE batch
         # (~batch_size * graph size) must additionally fit the flat kernel's
@@ -147,44 +307,43 @@ class ContrastiveTrainer:
             max_nodes_per_graph=MAX_NODES_PER_MICROBATCH,
             max_edges_per_graph=MAX_EDGES_PER_MICROBATCH,
         )
-        bs = min(tc.batch_size, len(train_idx))
+
         ctx = set_mesh_rules(self.mesh_rules) if self.mesh_rules else None
         if ctx:
             ctx.__enter__()
         try:
-            t0 = time.time()
-            for step in range(tc.steps):
-                idx = rng_np.choice(len(train_idx), size=bs,
-                                    replace=len(train_idx) < bs)
-                sel = train_idx[idx]
-                packed, meta = pack_graphs([graphs[i] for i in sel], **caps)
-                trunc_nodes += int(meta.trunc_nodes.sum())
-                bucket_keys.add(bucket_key(packed))
-                batch = {k: jnp.asarray(v) for k, v in packed.items()}
-                key, k_step = jax.random.split(key)
-                state, metrics = step_fn(state, batch, k_step)
-                if verbose and (step % tc.log_every == 0 or step == tc.steps - 1):
-                    m = {k: float(v) for k, v in metrics.items()}
-                    print(
-                        f"  step {step:4d} loss={m['loss']:.4f} "
-                        f"acc={m['nce_acc']:.3f} lr={m['lr']:.2e} "
-                        f"({time.time() - t0:.1f}s)"
-                    )
-                history.append({k: float(v) for k, v in metrics.items()})
+            if tc.engine == "python":
+                if checkpoint_dir is not None:
+                    raise ValueError(
+                        "checkpointing requires engine='scan' (the python "
+                        "path is a parity shim)")
+                state, info = self._fit_python(
+                    graphs, selections, state, base_key, caps, verbose)
+            elif tc.engine == "scan":
+                state, info = self._fit_scan(
+                    graphs, selections, state, base_key, caps, verbose,
+                    checkpoint_dir=checkpoint_dir, resume=resume,
+                    interrupt_after=interrupt_after)
+            else:
+                raise ValueError(f"unknown engine {tc.engine!r}")
+
+            # validation InfoNCE — eval mode: no dropout, no feature noise,
+            # augmentations drawn from a FIXED key (deterministic)
+            trunc_nodes = info["trunc_nodes"]
+            if n_val:
+                packed, vmeta = pack_graphs(
+                    [graphs[i] for i in val_idx], **caps)
+                trunc_nodes += int(vmeta.trunc_nodes.sum())
+                vb = {k: jnp.asarray(v) for k, v in packed.items()}
+                loss, m = self._engine().eval_loss(
+                    state.params, vb, jax.random.PRNGKey(123))
+                info["val_loss"] = float(loss)
+                info["val_acc"] = float(m["nce_acc"])
+                info["host_syncs"] += 1
         finally:
             if ctx:
                 ctx.__exit__(None, None, None)
 
-        # validation InfoNCE (no dropout/noise, fixed augs)
-        val = {}
-        if n_val:
-            packed, vmeta = pack_graphs([graphs[i] for i in val_idx], **caps)
-            trunc_nodes += int(vmeta.trunc_nodes.sum())
-            vb = {k: jnp.asarray(v) for k, v in packed.items()}
-            loss, m = jax.jit(self._loss_packed)(
-                state.params, vb, jax.random.PRNGKey(123)
-            )
-            val = {"val_loss": float(loss), "val_acc": float(m["nce_acc"])}
         if trunc_nodes:
             import warnings
 
@@ -193,14 +352,201 @@ class ContrastiveTrainer:
                 f"budget; graphs were truncated (see batching caps)",
                 stacklevel=2,
             )
+        info["trunc_nodes"] = trunc_nodes
+        return state.params, info
+
+    def _fit_python(self, graphs, selections, state, base_key, caps, verbose):
+        """The pre-engine per-step loop, preserved as a parity shim and the
+        per-step benchmark baseline: packs on the host, uploads, and blocks
+        on a device->host metrics sync EVERY step, and re-jits per fit
+        (exactly the seed trainer's behavior).  Shares `packed_loss` with the
+        scan engine so the two can only differ in execution, not math."""
+        tc = self.tc
+        step_fn = self._make_step()
+        history = []
+        bucket_keys = set()
+        trunc_nodes = 0
+        t0 = time.time()
+        for step in range(len(selections)):
+            packed, meta = pack_graphs(
+                [graphs[i] for i in selections[step]], **caps)
+            trunc_nodes += int(meta.trunc_nodes.sum())
+            bucket_keys.add(bucket_key(packed))
+            batch = {k: jnp.asarray(v) for k, v in packed.items()}
+            k_step = jax.random.fold_in(base_key, step)
+            state, metrics = step_fn(state, batch, k_step)
+            if verbose and (step % tc.log_every == 0 or step == tc.steps - 1):
+                m = {k: float(v) for k, v in metrics.items()}
+                print(
+                    f"  step {step:4d} loss={m['loss']:.4f} "
+                    f"acc={m['nce_acc']:.3f} lr={m['lr']:.2e} "
+                    f"({time.time() - t0:.1f}s)"
+                )
+            history.append({k: float(v) for k, v in metrics.items()})
         info = {
             "history": history,
             "bucket_keys": sorted(bucket_keys),
             "step_compiles": _jit_cache_size(step_fn),
             "trunc_nodes": trunc_nodes,
-            **val,
+            "engine": "python",
+            "host_syncs": len(history),
+            "resumed_from": 0,
+            "checkpoint_saves": 0,
         }
-        return state.params, info
+        return state, info
+
+    def _fit_scan(self, graphs, selections, state, base_key, caps, verbose,
+                  *, checkpoint_dir, resume, interrupt_after):
+        """Compiled engine: pre-packed epoch plan, per-segment device
+        staging, fixed-length masked scan chunks, log_every-gated host
+        syncs, chunk-boundary checkpoints."""
+        tc = self.tc
+        eng = self._engine()
+        plan = plan_epoch(graphs, selections, **caps)
+        steps = plan.n_steps
+        chunk_len = min(tc.scan_chunk, bucket_size(max(steps, 1), 1))
+
+        mgr = CheckpointManager(checkpoint_dir) if checkpoint_dir else None
+        start_step = 0
+        history: list[dict] = []
+        if mgr is not None and resume and mgr.latest_step() is not None:
+            state, history, start_step = self._restore_fit(mgr, base_key)
+
+        host_syncs = 0
+        saves = 0
+        last_save = start_step
+        next_log = ((start_step // tc.log_every) + 1) * tc.log_every
+        pending: list[tuple] = []   # (ys device array, live bool mask)
+        n_chunks = 0
+        t0 = time.time()
+
+        def flush():
+            """Pull all buffered per-step metrics to the host in ONE sync."""
+            nonlocal host_syncs
+            if not pending:
+                return
+            host_syncs += 1
+            for ys, live in pending:
+                vals = np.asarray(ys)
+                for j in np.nonzero(live)[0]:
+                    history.append(
+                        {k: float(vals[j, i])
+                         for i, k in enumerate(METRIC_KEYS)})
+            pending.clear()
+            if verbose and history:
+                m = history[-1]
+                print(
+                    f"  step {len(history) - 1:4d} loss={m['loss']:.4f} "
+                    f"acc={m['nce_acc']:.3f} lr={m['lr']:.2e} "
+                    f"({time.time() - t0:.1f}s)"
+                )
+
+        for seg in plan.segments:
+            for lo in range(seg.start, seg.stop, chunk_len):
+                hi = min(lo + chunk_len, seg.stop)
+                if hi <= start_step:
+                    continue
+                n_chunks += 1
+                r0, r1 = lo - seg.start, hi - seg.start
+                stacked = {}
+                for f, arr in seg.batches.items():
+                    rows = arr[r0:r1]
+                    if len(rows) < chunk_len:  # edge-pad dead tail steps
+                        pad = np.repeat(rows[-1:], chunk_len - len(rows),
+                                        axis=0)
+                        rows = np.concatenate([rows, pad], axis=0)
+                    stacked[f] = jnp.asarray(rows)
+                abs_idx = np.arange(lo, lo + chunk_len)
+                live = (abs_idx < hi) & (abs_idx >= start_step)
+                keys = jax.vmap(
+                    lambda i: jax.random.fold_in(base_key, i)
+                )(jnp.asarray(abs_idx))
+                state, ys = eng.scan(state, stacked, keys,
+                                     jnp.asarray(live))
+                pending.append((ys, live))
+
+                done = hi
+                if done >= next_log or done == steps:
+                    flush()
+                    next_log = ((done // tc.log_every) + 1) * tc.log_every
+                due = (mgr is not None and tc.checkpoint_every > 0
+                       and done - last_save >= tc.checkpoint_every)
+                interrupt = (interrupt_after is not None
+                             and done >= interrupt_after)
+                if due or (interrupt and mgr is not None):
+                    flush()
+                    self._save_fit(mgr, state, base_key, history, done)
+                    last_save = done
+                    saves += 1
+                if interrupt:
+                    if mgr is not None:
+                        mgr.wait()
+                    raise FitInterrupted(
+                        f"fit interrupted at step {done} "
+                        f"(interrupt_after={interrupt_after})")
+        flush()
+
+        info = {
+            "history": history,
+            "bucket_keys": list(plan.bucket_keys),
+            "step_compiles": _jit_cache_size(eng.scan),
+            "trunc_nodes": plan.trunc_nodes,
+            "engine": "scan",
+            "host_syncs": host_syncs,
+            "resumed_from": start_step,
+            "checkpoint_saves": saves,
+            "scan_chunks": n_chunks,
+            "chunk_len": chunk_len,
+        }
+        return state, info
+
+    # -- resume protocol -----------------------------------------------------
+    @staticmethod
+    def _save_fit(mgr: CheckpointManager, state: TrainState, base_key,
+                  history: list[dict], cursor: int):
+        tree = {
+            "state": {
+                "step": state.step, "params": state.params,
+                "mu": state.mu, "nu": state.nu,
+                **({"compress_err": state.compress_err}
+                   if state.compress_err is not None else {}),
+            },
+            "rng": np.asarray(base_key),
+            "history": {
+                k: np.asarray([h[k] for h in history], np.float32)
+                for k in METRIC_KEYS
+            },
+            "cursor": np.int64(cursor),
+        }
+        mgr.save(cursor, tree)
+
+    def _restore_fit(self, mgr: CheckpointManager, base_key):
+        """Rebuild (TrainState, history, cursor) from the latest snapshot;
+        refuses checkpoints from a different seed (the epoch plan would not
+        replay)."""
+        tree, ck_step = mgr.restore_tree()
+        if not np.array_equal(np.asarray(tree["rng"]),
+                              np.asarray(base_key)):
+            raise ValueError(
+                f"checkpoint in {mgr.directory} was written with a "
+                f"different seed; pass resume=False to refit")
+        sd = tree["state"]
+        state = TrainState(
+            step=jnp.asarray(sd["step"]),
+            params=jax.tree_util.tree_map(jnp.asarray, sd["params"]),
+            mu=jax.tree_util.tree_map(jnp.asarray, sd["mu"]),
+            nu=jax.tree_util.tree_map(jnp.asarray, sd["nu"]),
+            compress_err=(
+                jax.tree_util.tree_map(jnp.asarray, sd["compress_err"])
+                if "compress_err" in sd else None),
+        )
+        cursor = int(tree["cursor"])
+        hist = tree["history"]
+        history = [
+            {k: float(hist[k][i]) for k in METRIC_KEYS}
+            for i in range(cursor)
+        ]
+        return state, history, cursor
 
     # -- inference ----------------------------------------------------------
     def _embed_setup(self, params, n_cap, e_cap):

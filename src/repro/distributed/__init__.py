@@ -1,6 +1,7 @@
 from repro.distributed.sharding import (
     MeshRules,
     constrain,
+    constrain_batch,
     set_mesh_rules,
     current_rules,
     spec_for,

@@ -158,13 +158,54 @@ def sharding_for(names, shape, *, rules: MeshRules, is_param: bool) -> NamedShar
     return NamedSharding(rules.mesh, spec_for(names, shape, rules=rules, is_param=is_param))
 
 
-def constrain(x, *names):
-    """with_sharding_constraint using the active MeshRules (no-op otherwise)."""
-    rules = current_rules()
+def constrain(x, *names, rules: Optional[MeshRules] = None):
+    """with_sharding_constraint using the active MeshRules (no-op otherwise).
+    `rules` overrides the thread-local context (used by the compiled training
+    engine, whose traces are cached per MeshRules — see core/train.py)."""
+    rules = rules or current_rules()
     if rules is None:
         return x
     spec = spec_for(names, x.shape, rules=rules, is_param=False)
     return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+#: logical axis names for every field of a packed graph batch
+#: (core/batching.py layout).  The flat node/edge/warp/graph axes all carry
+#: the 'batch' logical name: packed graphs are data-parallel — bucket sizes
+#: are powers of two, so the axes divide evenly over the batch mesh axes.
+PACKED_BATCH_AXES: dict[str, tuple] = {
+    "node_type": ("batch",),
+    "token": ("batch",),
+    "pc_norm": ("batch",),
+    "vstats": ("batch", None),
+    "graph_id": ("batch",),
+    "warp_seg": ("batch",),
+    "node_mask": ("batch",),
+    "edge_src": ("batch",),
+    "edge_dst": ("batch",),
+    "edge_type": ("batch",),
+    "edge_graph": ("batch",),
+    "edge_mask": ("batch",),
+    "warp_graph": ("batch",),
+    "graph_mask": ("batch",),
+    "trunc_nodes": ("batch",),
+    "trunc_edges": ("batch",),
+}
+
+
+def constrain_batch(batch: dict, rules: Optional[MeshRules] = None) -> dict:
+    """Constrain every packed-batch field to its PACKED_BATCH_AXES spec so
+    the node/edge/graph axes stay data-parallel INSIDE a compiled scan step
+    (GSPMD would otherwise be free to gather the whole epoch slice onto one
+    shard).  No-op without active/explicit MeshRules."""
+    rules = rules or current_rules()
+    if rules is None:
+        return batch
+    return {
+        k: constrain(v, *PACKED_BATCH_AXES[k], rules=rules)
+        if k in PACKED_BATCH_AXES else v
+        for k, v in batch.items()
+    }
 
 
 def param_shardings(param_axes, abstract_params, rules: MeshRules):

@@ -49,7 +49,8 @@ SMOKE_SCENARIOS = dict(families=("iterative", "pipeline", "long_tail"),
 
 def _method_kwargs(method_id: str, *, smoke: bool = False,
                    gcl_steps: int = 0, seed: int = 0,
-                   suite: str = "paper") -> dict:
+                   suite: str = "paper", checkpoint_every: int = 0,
+                   resume: bool = True) -> dict:
     if method_id == "pka":
         return {"seed": seed} if seed else {}
     if method_id != "gcl":
@@ -63,6 +64,12 @@ def _method_kwargs(method_id: str, *, smoke: bool = False,
         kw["steps"] = gcl_steps
     if seed:
         kw["seed"] = seed
+    if checkpoint_every:
+        # encoder-fit snapshots under <out>/artifacts/checkpoints: an
+        # interrupted sweep rerun resumes mid-fit instead of refitting
+        kw["checkpoint_every"] = checkpoint_every
+    if not resume:
+        kw["resume"] = False
     return kw
 
 
@@ -110,6 +117,7 @@ def _family_summary(results: list[dict]) -> list[dict]:
 def run_grid(methods: list[str], programs: list[str], platforms: list[str],
              out_dir: str, *, smoke: bool = False, gcl_steps: int = 0,
              seed: int = 0, suite: str = "paper",
+             checkpoint_every: int = 0, resume: bool = True,
              verbose: bool = True) -> dict:
     """Run every (method, program) cell once, evaluate on every platform."""
     store = ArtifactStore(os.path.join(out_dir, "artifacts"))
@@ -128,7 +136,9 @@ def run_grid(methods: list[str], programs: list[str], platforms: list[str],
         method = get_method(
             method_id,
             **_method_kwargs(method_id, smoke=smoke, gcl_steps=gcl_steps,
-                             seed=seed, suite=suite))
+                             seed=seed, suite=suite,
+                             checkpoint_every=checkpoint_every,
+                             resume=resume))
         for program_name in programs:
             cell = f"{method_id} x {program_name}"
             try:
@@ -276,6 +286,13 @@ def main(argv=None) -> int:
                     help="tiny GCL config + small default programs")
     ap.add_argument("--gcl-steps", type=int, default=0,
                     help="override GCL contrastive training steps")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="snapshot GCL encoder fits every N steps under "
+                         "<out>/artifacts/checkpoints; a rerun of an "
+                         "interrupted sweep resumes mid-fit (0 = off)")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="ignore existing fit checkpoints (refit from "
+                         "scratch; snapshots are still written)")
     ap.add_argument("--seed", type=int, default=0,
                     help="reseed the stochastic methods (gcl, pka); "
                          "sieve/stem_root are deterministic")
@@ -314,7 +331,8 @@ def main(argv=None) -> int:
           f"-> {args.out} ==")
     doc = run_grid(methods, programs, platforms, args.out, smoke=args.smoke,
                    gcl_steps=args.gcl_steps, seed=args.seed,
-                   suite=args.suite)
+                   suite=args.suite, checkpoint_every=args.checkpoint_every,
+                   resume=not args.no_resume)
     validate_results(doc)
     os.makedirs(args.out, exist_ok=True)
     results_path = os.path.join(args.out, "results.json")

@@ -28,14 +28,23 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
         if tcfg.microbatch and tcfg.microbatch > 1:
             grads, metrics = _accumulated_grads(cfg, state.params, batch, tcfg)
         else:
+            # differentiate the SCALED loss (adamw_update divides the grads
+            # by tcfg.loss_scale — the two sides of the loss-scale contract,
+            # DESIGN.md §7); reported metrics stay unscaled
             (loss, aux), grads = jax.value_and_grad(
-                lambda p: tf.lm_loss(cfg, p, batch), has_aux=True
+                lambda p: _scaled_lm_loss(cfg, p, batch, tcfg.loss_scale),
+                has_aux=True,
             )(state.params)
-            metrics = dict(aux, loss=loss)
+            metrics = dict(aux, loss=loss / tcfg.loss_scale)
         new_state, opt_metrics = apply_gradients(state, grads, tcfg)
         return new_state, dict(metrics, **opt_metrics)
 
     return train_step
+
+
+def _scaled_lm_loss(cfg, params, batch, scale):
+    loss, aux = tf.lm_loss(cfg, params, batch)
+    return loss * scale, aux
 
 
 def _accumulated_grads(cfg, params, batch, tcfg):
@@ -51,7 +60,8 @@ def _accumulated_grads(cfg, params, batch, tcfg):
     def body(carry, mb):
         acc, loss_acc = carry
         (loss, _), grads = jax.value_and_grad(
-            lambda p: tf.lm_loss(cfg, p, mb), has_aux=True
+            lambda p: _scaled_lm_loss(cfg, p, mb, tcfg.loss_scale),
+            has_aux=True,
         )(params)
         acc = jax.tree_util.tree_map(jnp.add, acc, grads)
         return (acc, loss_acc + loss), None
@@ -59,7 +69,7 @@ def _accumulated_grads(cfg, params, batch, tcfg):
     zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     (grads, loss), _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)), micro)
     grads = jax.tree_util.tree_map(lambda g: g / n, grads)
-    return grads, {"loss": loss / n}
+    return grads, {"loss": loss / (n * tcfg.loss_scale)}
 
 
 def make_prefill_step(cfg: ModelConfig):

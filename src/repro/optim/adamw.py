@@ -3,6 +3,10 @@
 - configurable moment dtype (bf16 moments for >30B archs — halves optimizer
   HBM; error is absorbed by Adam's normalization),
 - global-norm gradient clipping,
+- static loss-scale support (``TrainConfig.loss_scale``): when the loss was
+  scaled before differentiation (mixed-precision policy, DESIGN.md §7) the
+  update divides the gradients back out in f32 before the moment update —
+  clipping and ``grad_norm`` are reported in UNSCALED units,
 - optional error-feedback int8 gradient compression on the DP all-reduce
   (beyond-paper distributed-optimization feature; see optim/grad_compress.py).
 
@@ -55,14 +59,15 @@ def adamw_update(grads, state: TrainState, tcfg: TrainConfig):
         total_steps=tcfg.total_steps, warmup_steps=tcfg.warmup_steps,
     )
 
-    gnorm = global_norm(grads)
+    inv_scale = 1.0 / tcfg.loss_scale
+    gnorm = global_norm(grads) * inv_scale
     clip = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9))
     b1, b2, eps, wd = tcfg.beta1, tcfg.beta2, tcfg.eps, tcfg.weight_decay
     c1 = 1.0 - b1 ** step.astype(jnp.float32)
     c2 = 1.0 - b2 ** step.astype(jnp.float32)
 
     def upd(p, g, m, v):
-        g = g.astype(jnp.float32) * clip
+        g = g.astype(jnp.float32) * (inv_scale * clip)
         m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
         m_new = b1 * m32 + (1 - b1) * g
         v_new = b2 * v32 + (1 - b2) * jnp.square(g)

@@ -128,6 +128,11 @@ class SamplingMethod(abc.ABC):
 
         return f"{config_hash(self.config())}-{program_fingerprint(program)}"
 
+    def attach_store(self, store) -> None:
+        """Hook: called by ``run`` before prepare/load so methods with
+        store-adjacent state (e.g. the GCL method's fit checkpoints under
+        ``store.checkpoint_dir``) can pick the store up.  Default: nothing."""
+
     def run(self, program: Program, store=None) -> tuple[SamplingPlan, Artifacts]:
         """prepare + plan, with content-hash reuse through ``store``.
 
@@ -137,6 +142,7 @@ class SamplingMethod(abc.ABC):
         """
         artifacts = None
         if store is not None:
+            self.attach_store(store)
             artifacts = store.load(self.id, self.artifact_key(program))
         if artifacts is None:
             artifacts = self.prepare(program)

@@ -71,14 +71,21 @@ class GCLMethod(SamplingMethod):
                  cap_instr: Optional[int] = None,
                  k_max: Optional[int] = None,
                  seed: Optional[int] = None,
-                 streaming: Optional[bool] = None):
+                 streaming: Optional[bool] = None,
+                 engine: Optional[str] = None,
+                 checkpoint_every: Optional[int] = None,
+                 resume: bool = True):
         #: None = auto (stream iff len(program) >= STREAM_THRESHOLD);
         #: True/False force the streaming / materialized ingestion path
         self.streaming = streaming
+        #: False = ignore existing fit checkpoints and refit from scratch
+        self.resume = resume
         cfg = cfg or GCLSamplerConfig()
         train_kw = {k: v for k, v in
                     [("steps", steps), ("batch_size", batch_size),
-                     ("seed", seed)] if v is not None}
+                     ("seed", seed), ("engine", engine),
+                     ("checkpoint_every", checkpoint_every)]
+                    if v is not None}
         cfg_kw = {k: v for k, v in
                   [("cap_instr", cap_instr), ("k_max", k_max)]
                   if v is not None}
@@ -87,9 +94,30 @@ class GCLMethod(SamplingMethod):
         self.cfg = replace(cfg, **cfg_kw) if cfg_kw else cfg
         self.sampler = GCLSampler(self.cfg)
         self._trained_on: Optional[str] = None  # program fp of the fit
+        self._store = None                      # set by attach_store / run
 
     def config(self) -> dict:
-        return dict(asdict(self.cfg), streaming=self.streaming)
+        """JSON-safe config hashed into the artifact content key.  The
+        checkpoint cadence is EXCLUDED: it changes when snapshots are taken,
+        never the fitted encoder (resume is bit-exact), so two runs that
+        differ only in cadence must share artifacts."""
+        cfg = asdict(self.cfg)
+        cfg["train"].pop("checkpoint_every", None)
+        return dict(cfg, streaming=self.streaming)
+
+    def attach_store(self, store) -> None:
+        """Remember the store so ``prepare`` can place fit checkpoints under
+        ``store.checkpoint_dir`` (an interrupted prepare then resumes from
+        the last snapshot instead of refitting)."""
+        self._store = store
+
+    def _fit_checkpoint_dir(self, program: Program) -> Optional[str]:
+        if self._store is None or self.cfg.train.checkpoint_every <= 0:
+            return None
+        # artifact_key is the single source of truth for content keys; a
+        # fit only happens with no adopted encoder, so the provenance
+        # suffix is empty and this equals the artifact's own key
+        return self._store.checkpoint_dir(self.id, self.artifact_key(program))
 
     def _use_streaming(self, program: Program) -> bool:
         if self.streaming is not None:
@@ -117,18 +145,21 @@ class GCLMethod(SamplingMethod):
         t1 = time.time()
         meta: dict = {"streaming": stream}
         if self.sampler.params is None:
+            ckpt = dict(checkpoint_dir=self._fit_checkpoint_dir(program),
+                        resume=self.resume)
             if stream:
                 # n_total makes the training subset identical to the
                 # materialized path: streaming changes memory, not results
                 info = self.sampler.train_stream(
                     self.sampler.iter_graphs(program),
-                    n_total=len(program))
+                    n_total=len(program), **ckpt)
             else:
-                info = self.sampler.train(graphs)
+                info = self.sampler.train(graphs, **ckpt)
             self._trained_on = program_fingerprint(program)
             meta["train"] = {
                 k: info[k] for k in
-                ("val_loss", "val_acc", "trunc_nodes", "step_compiles")
+                ("val_loss", "val_acc", "trunc_nodes", "step_compiles",
+                 "engine", "resumed_from", "checkpoint_saves", "host_syncs")
                 if k in info
             }
         else:

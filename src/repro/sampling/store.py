@@ -129,6 +129,14 @@ class ArtifactStore:
     def _artifact_dir(self, method: str, key: str) -> str:
         return os.path.join(self.root, method, key)
 
+    def checkpoint_dir(self, method: str, key: str) -> str:
+        """Directory for a method's in-flight fit checkpoints (the trainer
+        resume protocol, DESIGN.md §6).  Lives NEXT TO the artifacts under
+        the same content key, so an interrupted ``prepare`` resumed later
+        finds its snapshots; once the finished artifact is published the
+        checkpoints are just a warm cache for refits."""
+        return os.path.join(self.root, "checkpoints", method, key)
+
     def has(self, method: str, key: str) -> bool:
         return os.path.exists(
             os.path.join(self._artifact_dir(method, key), "meta.json"))
