@@ -1,0 +1,227 @@
+"""Plan-serving throughput: the compiled multi-K sweep vs the sequential
+per-K loop, over a fleet of programs.
+
+The serving path (paper §3.4: embeddings -> silhouette K-selection ->
+representatives) is raced two ways on the same synthetic embedding fleet
+(sizes spread across power-of-two buckets, like the scenario grid):
+
+- ``sequential``: `select_k_and_cluster` — one jitted K-Means fit plus an
+  O(n^2) silhouette per candidate K, per program (the pre-engine path,
+  kept as the parity reference);
+- ``engine``: `repro.sampling.PlanEngine` — size-bucketed batches, every
+  candidate K of every program in a chunk evaluated in ONE compiled
+  vmapped sweep, executables cached process-wide.
+
+Each side runs ``n_rounds`` passes over the fleet (cold + steady).  The
+timing model's `simulate_batch` vs scalar `simulate_kernel` is raced too
+(the other half of the serving path).  Results go to
+``benchmarks/results/plan_throughput.json`` AND a repo-root
+``BENCH_plan_throughput.json`` with plans/s, compile counts (engine builds
++ sequential executable cache growth), the zero-recompile check on the
+second program of a bucket, and sweep-vs-sequential parity deltas.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import save_results
+from repro.core import clustering
+from repro.core.clustering import select_k_and_cluster
+from repro.sampling.engine import PlanEngine, PlanRequest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _fleet(n_programs: int, d: int, seed: int = 0):
+    """Synthetic per-program embedding matrices: blob-structured (so K
+    selection has signal), sizes spread across pow2 buckets like the
+    scenario grid's generated programs."""
+    rng = np.random.default_rng(seed)
+    fleet = []
+    for i in range(n_programs):
+        k_true = int(rng.integers(2, 7))
+        n_per = int(rng.integers(12, 60))
+        centers = rng.standard_normal((k_true, d)) * 40.0
+        x = np.concatenate(
+            [c + rng.standard_normal((n_per, d)) * 0.5 for c in centers]
+        ).astype(np.float32)
+        fleet.append(x)
+    return fleet
+
+
+def run(n_programs: int = 16, d: int = 64, k_max: int = 16, iters: int = 25,
+        n_rounds: int = 2, fast: bool = False, verbose: bool = True) -> dict:
+    if fast:  # benchmarks.run / CI entry point
+        n_programs, k_max, iters = min(n_programs, 8), min(k_max, 12), 15
+
+    fleet = _fleet(n_programs, d)
+    seqs = [np.arange(len(x)) for x in fleet]
+    kw = dict(k_max=k_max, iters=iters)
+
+    sides: dict = {}
+    # -- sequential reference ------------------------------------------------
+    seq_execs0 = (clustering._kmeans_run._cache_size()
+                  + clustering._silhouette_jit._cache_size())
+    rounds = []
+    seq_out = None
+    for r in range(n_rounds):
+        t0 = time.time()
+        seq_out = [select_k_and_cluster(x, seed=i, **kw)
+                   for i, x in enumerate(fleet)]
+        wall = time.time() - t0
+        rounds.append({"wall_s": wall, "plans_per_s": n_programs / wall})
+        if verbose:
+            print(f"[plan-throughput] sequential round {r}: {wall:.2f}s "
+                  f"-> {n_programs / wall:.2f} plans/s", flush=True)
+    sides["sequential"] = {
+        "rounds": rounds, "cold": rounds[0], "steady": rounds[-1],
+        "executables": (clustering._kmeans_run._cache_size()
+                        + clustering._silhouette_jit._cache_size()
+                        - seq_execs0),
+    }
+
+    # -- compiled engine -----------------------------------------------------
+    clustering.reset_engine_stats()
+    engine = PlanEngine(k_max=k_max, iters=iters)
+    rounds = []
+    eng_out = None
+    for r in range(n_rounds):
+        t0 = time.time()
+        plans = engine.plan_many([
+            PlanRequest(x, s, "bench", seed=i)
+            for i, (x, s) in enumerate(zip(fleet, seqs))])
+        wall = time.time() - t0
+        eng_out = [(p.labels, p.extra) for p in plans]
+        rounds.append({"wall_s": wall, "plans_per_s": n_programs / wall})
+        if verbose:
+            print(f"[plan-throughput] engine     round {r}: {wall:.2f}s "
+                  f"-> {n_programs / wall:.2f} plans/s", flush=True)
+    st = engine.engine_stats()
+    # zero-recompile check AFTER the timed rounds (probe compiles must not
+    # pollute the round build counts): two DISTINCT same-bucket programs,
+    # planned one after the other — the second may build nothing
+    rng = np.random.default_rng(99)
+    probe = [rng.standard_normal((n, d)).astype(np.float32)
+             for n in (40, 45)]  # both in the 64-point bucket
+    assert (clustering.bucket_points(len(probe[0]))
+            == clustering.bucket_points(len(probe[1])))
+    engine.cluster(probe[0], seed=0)
+    builds_after_first = clustering.ENGINE_STATS["builds"]
+    engine.cluster(probe[1], seed=1)
+    second_program_builds = (clustering.ENGINE_STATS["builds"]
+                             - builds_after_first)
+    sides["engine"] = {
+        "rounds": rounds, "cold": rounds[0], "steady": rounds[-1],
+        "builds": st["builds"], "dispatches": st["dispatches"],
+        "bucket_hist": st["bucket_hist"],
+        "second_program_builds": second_program_builds,
+    }
+
+    # -- parity --------------------------------------------------------------
+    label_match = [bool(np.array_equal(a[0], b[0]))
+                   for a, b in zip(seq_out, eng_out)]
+    k_match = [a[1]["k"] == b[1]["k"] for a, b in zip(seq_out, eng_out)]
+    sil_delta = max(abs(a[1]["sil"] - b[1]["sil"])
+                    for a, b in zip(seq_out, eng_out))
+    parity = {
+        "programs": n_programs,
+        "labels_identical": int(sum(label_match)),
+        "k_identical": int(sum(k_match)),
+        "max_sil_delta": float(sil_delta),
+    }
+
+    # -- vectorized timing model vs the scalar shim --------------------------
+    from repro.sim.hardware import P1
+    from repro.sim.timing import (
+        _METRIC_FIELDS, _simulate_kernel_scalar, simulate_batch, stack_stats,
+    )
+    from repro.tracing.programs import get_program
+
+    prog = get_program("3mm" if fast else "AlexNet")
+    stats = [k.stats("P1") for k in prog.kernels]
+    t0 = time.time()
+    batch = simulate_batch(stack_stats(stats), P1)
+    batch_s = time.time() - t0
+    t0 = time.time()
+    scalar = [_simulate_kernel_scalar(s, P1) for s in stats]
+    scalar_s = time.time() - t0
+    sim_delta = max(
+        abs(getattr(batch[i], f) - getattr(m, f))
+        / max(abs(getattr(m, f)), 1e-12)
+        for i, m in enumerate(scalar) for f in _METRIC_FIELDS)
+    timing_model = {
+        "program": prog.name, "kernels": len(stats),
+        "batch_s": batch_s, "scalar_s": scalar_s,
+        "kernels_per_s_batch": len(stats) / max(batch_s, 1e-9),
+        "kernels_per_s_scalar": len(stats) / max(scalar_s, 1e-9),
+        "speedup": scalar_s / max(batch_s, 1e-9),
+        "max_rel_delta": float(sim_delta),
+    }
+
+    doc = {
+        "settings": {"n_programs": n_programs, "d": d, "k_max": k_max,
+                     "iters": iters, "n_rounds": n_rounds},
+        "sides": sides,
+        "parity": parity,
+        "timing_model": timing_model,
+        # headline: steady-state plan throughput (sweeps replan the same
+        # buckets over and over; the engine's executables are already hot)
+        "speedup_steady": (sides["engine"]["steady"]["plans_per_s"]
+                           / sides["sequential"]["steady"]["plans_per_s"]),
+        "speedup_cold": (sides["engine"]["cold"]["plans_per_s"]
+                         / sides["sequential"]["cold"]["plans_per_s"]),
+        "second_program_builds": second_program_builds,
+    }
+    if verbose:
+        print(f"[plan-throughput] steady speedup {doc['speedup_steady']:.2f}x "
+              f"(cold {doc['speedup_cold']:.2f}x), parity "
+              f"{parity['labels_identical']}/{n_programs} labels identical, "
+              f"second-program builds {second_program_builds}", flush=True)
+
+    save_results("plan_throughput", doc)
+    bench_path = os.path.join(REPO_ROOT, "BENCH_plan_throughput.json")
+    with open(bench_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    if verbose:
+        print(f"[plan-throughput] wrote {bench_path}", flush=True)
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_plan_throughput")
+    ap.add_argument("--n-programs", type=int, default=16)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--k-max", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=25)
+    ap.add_argument("--n-rounds", type=int, default=2)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer/smaller programs)")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="exit non-zero if steady speedup falls below this")
+    args = ap.parse_args(argv)
+    doc = run(n_programs=args.n_programs, d=args.d, k_max=args.k_max,
+              iters=args.iters, n_rounds=args.n_rounds, fast=args.smoke)
+    bad = []
+    if args.min_speedup and doc["speedup_steady"] < args.min_speedup:
+        bad.append(f"steady speedup {doc['speedup_steady']:.2f}x < "
+                   f"{args.min_speedup:.2f}x")
+    if doc["second_program_builds"] != 0:
+        bad.append(f"second program compiled "
+                   f"{doc['second_program_builds']} executables (want 0)")
+    p = doc["parity"]
+    if p["labels_identical"] != p["programs"] or p["k_identical"] != p["programs"]:
+        bad.append(f"parity broken: {p}")
+    if bad:
+        print("FAIL: " + "; ".join(bad))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -48,8 +48,8 @@ def main() -> None:
 
     from benchmarks import (
         bench_ablations, bench_accuracy_speedup, bench_crossarch,
-        bench_e2e_sim, bench_microarch, bench_roofline,
-        bench_train_throughput,
+        bench_e2e_sim, bench_microarch, bench_plan_throughput,
+        bench_roofline, bench_train_throughput,
     )
 
     bench("fig45", bench_accuracy_speedup.run, programs=programs, fast=fast)
@@ -59,6 +59,7 @@ def main() -> None:
           programs=("nw", "lud") if fast else bench_e2e_sim.PROGRAMS,
           fast=fast)
     bench("traincost", bench_train_throughput.run, fast=fast)
+    bench("plans", bench_plan_throughput.run, fast=fast)
     if args.full or (only and "ablations" in only):
         bench("ablations", bench_ablations.run, fast=True)
     bench("roofline", bench_roofline.run)

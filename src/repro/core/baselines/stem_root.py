@@ -24,7 +24,7 @@ import numpy as np
 from repro.sampling.base import plan_from_labels
 from repro.sim.hardware import PLATFORMS
 from repro.sim.simulate import SamplingPlan
-from repro.sim.timing import simulate_kernel
+from repro.sim.timing import simulate_batch, stack_stats
 from repro.tracing.programs import Program
 
 Z_SCORE = 1.96
@@ -32,11 +32,11 @@ GAP_REL = 0.15  # relative gap threshold for splitting time clusters
 
 
 def stem_root_times(program: Program, platform: str = "P1") -> np.ndarray:
-    """Profiled per-invocation execution times (the STEM signature)."""
+    """Profiled per-invocation execution times (the STEM signature),
+    timed in one vectorized `simulate_batch` pass."""
     hw = PLATFORMS[platform]
-    return np.array(
-        [simulate_kernel(k.stats(platform), hw).time_s for k in program.kernels]
-    )
+    stats = [k.stats(platform) for k in program.kernels]
+    return np.asarray(simulate_batch(stack_stats(stats), hw).time_s)
 
 
 def stem_root_partition(times: np.ndarray, names: list, eps: float = 0.25):

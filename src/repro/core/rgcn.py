@@ -40,7 +40,9 @@ class RGCNConfig:
     proj_out: int = 64
     dropout: float = 0.1
     feat_noise_sigma: float = 0.01
-    use_pallas: bool = False          # dispatch rgcn_spmm kernel (interpret on CPU)
+    use_pallas: bool = False          # dispatch Pallas kernels: rgcn_spmm here,
+                                      # fused kmeans_assign in the plan engine
+                                      # (interpret resolves per backend)
     message_dtype: str = "float32"    # 'bfloat16' halves message-passing traffic
     #: mixed-precision policy (core/precision.py): activations run in
     #: `policy.compute_dtype`, LayerNorm stats / readout / InfoNCE stay f32,
@@ -167,12 +169,13 @@ def _rgcn_layer(lp, rc: RGCNConfig, h, batch, *, last, rng=None, train=False):
     norm = 1.0 / jnp.maximum(jnp.take_along_axis(deg, key, axis=1), 1.0)
 
     if rc.use_pallas:
+        from repro.kernels import default_interpret
         from repro.kernels.rgcn_spmm.ops import rgcn_message_agg
 
         coef = jnp.take(lp["comb"], etype, axis=0)  # (B,E,nb)
         w = coef * (emask * norm)[..., None]
         agg = rgcn_message_agg(
-            h, lp["basis"], src, dst, w, N, True,
+            h, lp["basis"], src, dst, w, N, default_interpret(),
         )
     else:
         # gather-first + aggregate-then-transform: the basis contraction is
@@ -258,10 +261,11 @@ def _rgcn_layer_packed(lp, rc: RGCNConfig, h, batch, *, last, rng=None,
     coef = jnp.take(lp["comb"], etype, axis=0)          # (Q,nb)
     w = coef * (emask * norm)[:, None]                  # (Q,nb)
     if rc.use_pallas:
+        from repro.kernels import default_interpret
         from repro.kernels.rgcn_spmm.ops import rgcn_message_agg_flat
 
         agg = rgcn_message_agg_flat(
-            h, lp["basis"], src, dst, w, P, True,
+            h, lp["basis"], src, dst, w, P, default_interpret(),
         )
     else:
         mdt = _message_dtype(rc)

@@ -4,10 +4,14 @@
   kernel embeddings z_k -> K-Means (silhouette K) -> representatives
   (first invocation per cluster) -> SamplingPlan.
 
-This class is the ENGINE behind the registered ``gcl`` sampling method;
+This class is the MODEL behind the registered ``gcl`` sampling method;
 prefer the unified API (``repro.sampling.get_method("gcl")``) for new code.
-``plan_from_labels`` now lives in ``repro.sampling`` (shared by all
-methods) and is re-exported here for backward compatibility.
+``plan_from_labels`` lives in ``repro.sampling`` (shared by all methods)
+and is re-exported here for backward compatibility; the K-selection /
+clustering stage routes through the compiled planning engine
+(``repro.sampling.PlanEngine`` over the swept K-Means in
+``core/clustering.py`` — DESIGN.md §8), with the sequential
+``select_k_and_cluster`` loop kept as its parity reference.
 """
 
 from __future__ import annotations
@@ -18,7 +22,6 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.clustering import select_k_and_cluster
 from repro.core.graphs import KernelGraph, iter_kernel_graphs
 from repro.core.rgcn import RGCNConfig
 from repro.core.train import ContrastiveTrainer, GCLTrainConfig
@@ -123,20 +126,31 @@ class GCLSampler:
             )
         return self.trainer.embed_stream(self.params, graphs_iter)
 
+    def plan_engine(self):
+        """The compiled planning engine configured for this sampler:
+        `k_max`/seed from the config, `use_pallas` threaded through from
+        `RGCNConfig` (the same switch that picks the rgcn_spmm kernel now
+        also picks the fused kmeans_assign / silhouette kernels)."""
+        from repro.sampling.engine import PlanEngine
+
+        return PlanEngine(k_max=self.cfg.k_max, seed=self.cfg.train.seed,
+                          use_pallas=self.cfg.rgcn.use_pallas)
+
     def cluster(self, embeddings: np.ndarray, seqs: np.ndarray) -> SamplingPlan:
-        labels, info = select_k_and_cluster(
-            embeddings, k_max=self.cfg.k_max, seed=self.cfg.train.seed
-        )
-        return plan_from_labels(labels, seqs, "GCL-Sampler", extra=info)
+        return self.plan_engine().plan(embeddings, seqs, "GCL-Sampler")
 
     # -- end-to-end ------------------------------------------------------------
     def fit(self, program: Program, verbose=False) -> SamplingPlan:
+        """End-to-end streaming fit: graphs are traced lazily per pass
+        (`iter_graphs`), trained via `train_stream` (same subset draw as the
+        materialized path) and embedded via `embed_stream`, so peak graph
+        residency stays bounded by one micro-batch instead of 2x the
+        program (PR 3's guarantee, previously bypassed here)."""
         t0 = time.time()
-        graphs = self.build_graphs(program)
-        t1 = time.time()
-        train_info = self.train(graphs, verbose=verbose)
+        train_info = self.train_stream(self.iter_graphs(program),
+                                       n_total=len(program), verbose=verbose)
         t2 = time.time()
-        emb = self.embed(graphs)
+        emb = self.embed_stream(self.iter_graphs(program))
         t3 = time.time()
         seqs = np.array([k.seq for k in program.kernels])
         plan = self.cluster(emb, seqs)
@@ -144,7 +158,7 @@ class GCLSampler:
             train=train_info,
             embed=dict(self.trainer.embed_stats),
             timings={
-                "graphs_s": t1 - t0, "train_s": t2 - t1,
+                "train_s": t2 - t0,  # includes the lazy trace->graph pass
                 "embed_s": t3 - t2, "cluster_s": time.time() - t3,
             },
         )

@@ -3,6 +3,8 @@
 flash_attention  GQA causal attention, online softmax, KV-block streaming
 rgcn_spmm        RGCN message aggregation as MXU one-hot matmuls (TPU-native
                  adaptation of scatter-gather SpMM; DESIGN.md §3)
+kmeans_assign    blocked K-Means assignment + fused Lloyd-step statistics +
+                 blocked silhouette sums (planning engine; DESIGN.md §8)
 ssd_scan         Mamba-2/SSD intra-chunk compute (per-chunk MXU matmuls)
 
 Each kernel ships <name>/kernel.py (pl.pallas_call + BlockSpec),
@@ -10,3 +12,15 @@ Each kernel ships <name>/kernel.py (pl.pallas_call + BlockSpec),
 (pure-jnp oracle).  All are validated against their oracle in interpret
 mode on CPU (tests/test_kernels_*.py); `interpret=False` targets real TPUs.
 """
+
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Backend-aware interpret default for every Pallas wrapper: interpret
+    on CPU (where Mosaic cannot compile), compiled everywhere else.  Call
+    sites that used to hardcode ``interpret=True`` now resolve through this
+    so TPU/GPU runs hit the real kernels."""
+    return jax.default_backend() == "cpu"

@@ -1,1 +1,3 @@
-from repro.kernels.kmeans_assign.ops import kmeans_assign
+from repro.kernels.kmeans_assign.ops import (
+    kmeans_assign, kmeans_assign_fused, silhouette_sums,
+)

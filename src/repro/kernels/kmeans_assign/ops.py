@@ -1,11 +1,44 @@
-"""jit'd wrapper for the K-Means assignment kernel (no grads needed —
-Lloyd's algorithm is derivative-free)."""
+"""jit'd wrappers for the K-Means / silhouette kernels (no grads needed —
+Lloyd's algorithm and silhouette scoring are derivative-free).
+
+``interpret=None`` resolves through :func:`repro.kernels.default_interpret`
+(interpret on CPU, compiled on TPU/GPU) so call sites never hardcode the
+backend.
+"""
 
 from __future__ import annotations
 
-from repro.kernels.kmeans_assign.kernel import kmeans_assign_fwd
+from typing import Optional
+
+from repro.kernels import default_interpret
+from repro.kernels.kmeans_assign.kernel import (
+    kmeans_assign_fused_fwd, kmeans_assign_fwd, silhouette_sums_fwd,
+)
 
 
-def kmeans_assign(x, cent, *, block_n=512, interpret=False):
+def _resolve(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else interpret
+
+
+def kmeans_assign(x, cent, *, block_n=512, interpret: Optional[bool] = None):
     """x (n,d), cent (k,d) -> (labels (n,) int32, min_sq_dist (n,))."""
-    return kmeans_assign_fwd(x, cent, block_n=block_n, interpret=interpret)
+    return kmeans_assign_fwd(x, cent, block_n=block_n,
+                             interpret=_resolve(interpret))
+
+
+def kmeans_assign_fused(x, cent, cmask, pmask, *, block_n=512,
+                        interpret: Optional[bool] = None):
+    """One streaming pass of a mask-aware Lloyd step: x (n,d), cent (k,d),
+    cmask (k,) live-centroid mask, pmask (n,) real-point mask ->
+    (labels (n,), masked min_sq_dist (n,), cluster sums (k,d), counts (k,))."""
+    return kmeans_assign_fused_fwd(x, cent, cmask, pmask, block_n=block_n,
+                                   interpret=_resolve(interpret))
+
+
+def silhouette_sums(x, onehot, *, block_n=512,
+                    interpret: Optional[bool] = None):
+    """Blocked per-(point, cluster) euclidean distance totals: x (n,d),
+    point-masked onehot (n,k) -> sums (n,k).  The (n,n) matrix is consumed
+    one (n, block_n) tile at a time and never materialized."""
+    return silhouette_sums_fwd(x, onehot, block_n=block_n,
+                               interpret=_resolve(interpret))

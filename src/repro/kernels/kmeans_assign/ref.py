@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for blocked K-Means assignment."""
+"""Pure-jnp oracles for the blocked K-Means kernels."""
 
 from __future__ import annotations
 
@@ -11,3 +11,31 @@ def kmeans_assign_ref(x, cent):
     c2 = jnp.sum(cent * cent, axis=1)
     d = jnp.maximum(x2 - 2.0 * x @ cent.T + c2[None], 0.0)
     return jnp.argmin(d, axis=1).astype(jnp.int32), jnp.min(d, axis=1)
+
+
+def kmeans_assign_fused_ref(x, cent, cmask, pmask):
+    """Oracle for the fused assign + min-dist + per-cluster-sum kernel.
+
+    Returns (labels (n,) int32, masked min_sq_dist (n,), cluster sums (k,d),
+    cluster counts (k,)).  `cmask` marks live centroid slots (dead slots
+    never win an argmin); `pmask` marks real points (padding contributes
+    nothing to dists/sums/counts).
+    """
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(cent * cent, axis=1)
+    d = jnp.maximum(x2 - 2.0 * x @ cent.T + c2[None], 0.0)
+    d = jnp.where(cmask[None, :] > 0, d, jnp.inf)
+    lab = jnp.argmin(d, axis=1).astype(jnp.int32)
+    mind = jnp.min(d, axis=1) * pmask
+    k = cent.shape[0]
+    onehot = (lab[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    onehot = onehot * pmask[:, None]
+    return lab, mind, onehot.T @ x, onehot.sum(0)
+
+
+def silhouette_sums_ref(x, onehot):
+    """Oracle for the blocked silhouette accumulator: per-(point, cluster)
+    total euclidean distance, via the full (n, n) matrix."""
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    d2 = jnp.maximum(x2 - 2.0 * x @ x.T + x2.T, 0.0)
+    return jnp.sqrt(d2) @ onehot

@@ -20,6 +20,12 @@ once (on the method's decision platform, P1 by default) and the same plan
 is evaluated on every ``--platforms`` entry.  Artifacts are content-hash
 cached under ``<out>/artifacts`` — a second sweep over an overlapping grid
 replays trained encoders instead of refitting.
+
+Each method's program axis runs in two stages: every program is prepared
+(trained/profiled) first, then ALL plans are served through the method's
+``plan_batch`` — engine-backed methods (gcl, pka) dispatch many programs
+per compiled multi-K sweep (``repro.sampling.PlanEngine``; DESIGN.md §8)
+and full simulations are evaluated vectorized per program.
 """
 
 from __future__ import annotations
@@ -123,6 +129,7 @@ def run_grid(methods: list[str], programs: list[str], platforms: list[str],
     store = ArtifactStore(os.path.join(out_dir, "artifacts"))
     results: list[dict] = []
     failures: list[dict] = []
+    batch_plan_errors: list[dict] = []  # plan_batch -> per-cell fallbacks
     metrics_cache: dict = {}  # (program, platform) -> full simulation
 
     def metrics_for(program_name, program, platform):
@@ -139,14 +146,62 @@ def run_grid(methods: list[str], programs: list[str], platforms: list[str],
                              seed=seed, suite=suite,
                              checkpoint_every=checkpoint_every,
                              resume=resume))
+        # stage 1: prepare (train/profile/featurize) the whole program axis
+        prepared = []  # (program_name, program, artifacts, prepare_s)
         for program_name in programs:
             cell = f"{method_id} x {program_name}"
             try:
                 program = get_program(program_name)
                 t0 = time.time()
-                plan, artifacts = method.run(program, store=store)
+                artifacts = method.run_prepare(program, store=store)
+                prepared.append((program_name, program, artifacts,
+                                 time.time() - t0))
+            except Exception as e:  # a broken cell must not kill the sweep
+                failures.append({"cell": cell,
+                                 "error": f"{type(e).__name__}: {e}"})
+                if verbose:
+                    print(f"  [{cell}] FAILED: {e}", flush=True)
+        # stage 2: serve every prepared program's plan — engine-backed
+        # methods dispatch MANY programs per compiled multi-K sweep
+        t0 = time.time()
+        try:
+            plans = method.plan_batch(
+                [(prog, art) for _, prog, art, _ in prepared])
+            plans = list(zip(prepared, plans))
+        except Exception as e:  # batched serving failed: re-plan per cell
+            # the degradation must be loud — a batching-only bug would
+            # otherwise hide behind the per-cell fallback forever
+            batch_plan_errors.append({
+                "method_id": method_id,
+                "error": f"{type(e).__name__}: {e}"})
+            if verbose:
+                print(f"  [{method_id}] plan_batch FAILED "
+                      f"({type(e).__name__}: {e}); falling back to "
+                      f"per-cell planning", flush=True)
+            plans = []
+            for item in prepared:
+                program_name, program, artifacts, _ = item
+                try:
+                    plans.append((item, method.plan(program, artifacts)))
+                except Exception as e:
+                    failures.append({
+                        "cell": f"{method_id} x {program_name}",
+                        "error": f"{type(e).__name__}: {e}"})
+                    if verbose:
+                        print(f"  [{method_id} x {program_name}] FAILED: {e}",
+                              flush=True)
+        plan_s = (time.time() - t0) / max(len(plans), 1)
+        # plans are served; artifact payloads (encoder params, embeddings)
+        # are persisted in the store and no longer needed — don't pin
+        # O(programs x encoder) memory through the evaluation stage
+        for _, _, artifacts, _ in prepared:
+            artifacts.payload.clear()
+        # stage 3: persist + evaluate every (plan, platform)
+        for (program_name, program, artifacts, prep_s), plan in plans:
+            cell = f"{method_id} x {program_name}"
+            try:
                 store.save_plan(plan, method_id, artifacts.key)
-                fit_s = time.time() - t0
+                fit_s = prep_s + plan_s
                 if verbose:
                     print(f"  [{cell}] K={plan.num_clusters} "
                           f"reps={len(plan.rep_indices())} ({fit_s:.1f}s)",
@@ -160,8 +215,9 @@ def run_grid(methods: list[str], programs: list[str], platforms: list[str],
                                artifact_key=artifacts.key,
                                family=scenario_family_of(program_name))
                     results.append(row)
-            except Exception as e:  # a broken cell must not kill the sweep
-                failures.append({"cell": cell, "error": f"{type(e).__name__}: {e}"})
+            except Exception as e:
+                failures.append({"cell": cell,
+                                 "error": f"{type(e).__name__}: {e}"})
                 if verbose:
                     print(f"  [{cell}] FAILED: {e}", flush=True)
     return {
@@ -173,6 +229,7 @@ def run_grid(methods: list[str], programs: list[str], platforms: list[str],
         "results": results,
         "family_summary": _family_summary(results),
         "failures": failures,
+        "batch_plan_errors": batch_plan_errors,
     }
 
 
@@ -195,6 +252,8 @@ def validate_results(doc: dict) -> None:
         fail("results must be a list")
     if not isinstance(doc.get("failures"), list):
         fail("failures must be a list")
+    if not isinstance(doc.get("batch_plan_errors", []), list):
+        fail("batch_plan_errors must be a list")
     if not isinstance(doc.get("family_summary"), list):
         fail("family_summary must be a list")
     for i, row in enumerate(doc["family_summary"]):

@@ -18,6 +18,7 @@ trainer stack.
 from repro.sampling.base import (
     Artifacts, SamplingMethod, config_hash, plan_from_labels,
 )
+from repro.sampling.engine import PlanEngine, PlanEngineConfig, PlanRequest
 from repro.sampling.evaluate import EvalResult, evaluate, evaluate_metrics
 from repro.sampling.registry import (
     SAMPLING_METHODS, available_methods, get_method, register_method,
@@ -27,8 +28,9 @@ from repro.sampling.store import (
 )
 
 __all__ = [
-    "Artifacts", "ArtifactStore", "EvalResult", "SAMPLING_METHODS",
-    "SamplingMethod", "available_methods", "config_hash", "evaluate",
-    "evaluate_metrics", "flatten_tree", "get_method", "plan_from_labels",
-    "program_fingerprint", "register_method", "unflatten_tree",
+    "Artifacts", "ArtifactStore", "EvalResult", "PlanEngine",
+    "PlanEngineConfig", "PlanRequest", "SAMPLING_METHODS", "SamplingMethod",
+    "available_methods", "config_hash", "evaluate", "evaluate_metrics",
+    "flatten_tree", "get_method", "plan_from_labels", "program_fingerprint",
+    "register_method", "unflatten_tree",
 ]

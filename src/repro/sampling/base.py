@@ -133,13 +133,10 @@ class SamplingMethod(abc.ABC):
         store-adjacent state (e.g. the GCL method's fit checkpoints under
         ``store.checkpoint_dir``) can pick the store up.  Default: nothing."""
 
-    def run(self, program: Program, store=None) -> tuple[SamplingPlan, Artifacts]:
-        """prepare + plan, with content-hash reuse through ``store``.
-
-        When a store is given and already holds artifacts for
-        (method, config, program), ``prepare`` is skipped entirely and the
-        stored artifacts are replayed.
-        """
+    def run_prepare(self, program: Program, store=None) -> Artifacts:
+        """The prepare half of ``run``: load-or-prepare(-and-save) through
+        the store.  Exposed so grid drivers can prepare a whole program axis
+        first and then serve every plan through ``plan_batch``."""
         artifacts = None
         if store is not None:
             self.attach_store(store)
@@ -150,6 +147,26 @@ class SamplingMethod(abc.ABC):
                 store.save(artifacts)
         else:
             self.adopt(artifacts)
+        return artifacts
+
+    def plan_batch(self, items: list) -> list[SamplingPlan]:
+        """Plan MANY prepared programs: ``items`` is [(program, artifacts)].
+
+        Default: a plain loop over ``plan``.  Engine-backed methods (gcl,
+        pka) override this to serve every program of a batch through one
+        compiled multi-K sweep dispatch per size bucket
+        (:class:`repro.sampling.engine.PlanEngine`).
+        """
+        return [self.plan(p, a) for p, a in items]
+
+    def run(self, program: Program, store=None) -> tuple[SamplingPlan, Artifacts]:
+        """prepare + plan, with content-hash reuse through ``store``.
+
+        When a store is given and already holds artifacts for
+        (method, config, program), ``prepare`` is skipped entirely and the
+        stored artifacts are replayed.
+        """
+        artifacts = self.run_prepare(program, store)
         return self.plan(program, artifacts), artifacts
 
     def adopt(self, artifacts: Artifacts) -> None:

@@ -1,0 +1,148 @@
+"""PlanEngine — batched, compiled plan serving for every clustering method.
+
+The paper's serving path (§3.4: embeddings -> silhouette K-Means ->
+representatives) used to run one program at a time through a host-bound
+Python loop over candidate Ks.  The engine instead:
+
+- buckets plan requests by embedding-matrix size (PR 1-style power-of-two
+  points buckets, exact feature dim) so nearby program sizes share one
+  executable;
+- dispatches MANY programs per compiled K-sweep
+  (:func:`repro.core.clustering.sweep_cluster_stack`): all candidate Ks of
+  all programs in a bucket chunk evaluated in a single device trace;
+- falls back to the same host paths as the sequential reference for
+  trivial/tiny programs, so results are identical request-for-request.
+
+Executables are cached process-wide in :mod:`repro.core.clustering`
+(`ENGINE_STATS`), so a PlanEngine is cheap to construct — methods make one
+per plan call with their own (k_max, seed, use_pallas) and still share
+compiled sweeps.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+import numpy as np
+
+from repro.core.clustering import (
+    bucket_points, engine_stats, select_k_and_cluster, sweep_cluster_stack,
+)
+from repro.sampling.base import plan_from_labels
+from repro.sim.simulate import SamplingPlan
+
+
+@dataclass(frozen=True)
+class PlanEngineConfig:
+    """Clustering knobs (mirrors `select_k_and_cluster`) + engine policy."""
+    k_max: int = 48
+    seed: int = 0
+    sil_floor: float = 0.20
+    tie_tol: float = 0.02
+    tiny_n: int = 4
+    sil_cap: int = 1200
+    iters: int = 50
+    use_pallas: bool = False     # fused kmeans_assign / silhouette kernels
+    init: str = "host"           # 'host' numpy kmeans++ | 'device' fold-in
+    engine: str = "sweep"        # 'sweep' | 'sequential' (parity reference)
+    max_batch: int = 8           # programs per compiled dispatch
+
+
+@dataclass
+class PlanRequest:
+    """One program's plan inputs: kernel embeddings + invocation seqs."""
+    embeddings: np.ndarray
+    seqs: np.ndarray
+    method: str = ""
+    seed: Optional[int] = None   # overrides the engine seed per request
+    extra: dict = field(default_factory=dict)
+
+
+class PlanEngine:
+    def __init__(self, cfg: Optional[PlanEngineConfig] = None, **overrides):
+        cfg = cfg or PlanEngineConfig()
+        self.cfg = replace(cfg, **overrides) if overrides else cfg
+        #: per-instance serving counters (process-wide compile counters
+        #: live in repro.core.clustering.ENGINE_STATS)
+        self.stats = {"programs": 0, "dispatches": 0, "bucket_hist": {}}
+
+    # -- clustering ---------------------------------------------------------
+    def _cluster_kwargs(self) -> dict:
+        c = self.cfg
+        return dict(k_max=c.k_max, sil_floor=c.sil_floor, tie_tol=c.tie_tol,
+                    tiny_n=c.tiny_n, sil_cap=c.sil_cap, iters=c.iters,
+                    use_pallas=c.use_pallas, init=c.init)
+
+    def cluster_many(self, embs: list, seeds: Optional[list] = None):
+        """Cluster many programs' embeddings; returns aligned
+        [(labels, info)].  Requests are grouped by (points-bucket, dim) —
+        the sweep's OWN padding unit, so grouped programs share both the
+        executable and the padded shape — and chunked to `max_batch`
+        programs per compiled dispatch."""
+        seeds = ([self.cfg.seed] * len(embs) if seeds is None
+                 else [self.cfg.seed if s is None else s for s in seeds])
+        out: list = [None] * len(embs)
+        if self.cfg.engine == "sequential":
+            for i, x in enumerate(embs):
+                out[i] = select_k_and_cluster(
+                    np.asarray(x, np.float32), seed=seeds[i],
+                    **self._cluster_kwargs())
+            self.stats["programs"] += len(embs)
+            self.stats["dispatches"] += len(embs)
+            return out
+
+        groups: dict[tuple, list[int]] = {}
+        for i, x in enumerate(embs):
+            x = np.asarray(x)
+            d = x.shape[1] if x.ndim == 2 else 0
+            key = (bucket_points(len(x)), d)
+            groups.setdefault(key, []).append(i)
+        # use_pallas sweeps stay unbatched: pallas_call inside vmap leans on
+        # batching rules we don't exercise elsewhere — the cached executable
+        # is still shared across programs
+        cap = 1 if self.cfg.use_pallas else max(1, self.cfg.max_batch)
+        for key, idxs in sorted(groups.items()):
+            hist = self.stats["bucket_hist"]
+            hist[str(key)] = hist.get(str(key), 0) + len(idxs)
+            for lo in range(0, len(idxs), cap):
+                chunk = idxs[lo:lo + cap]
+                res = sweep_cluster_stack(
+                    [np.asarray(embs[i], np.float32) for i in chunk],
+                    seed=[seeds[i] for i in chunk],
+                    **self._cluster_kwargs())
+                for i, r in zip(chunk, res):
+                    out[i] = r
+                self.stats["dispatches"] += 1
+        self.stats["programs"] += len(embs)
+        return out
+
+    def cluster(self, emb: np.ndarray, seed: Optional[int] = None):
+        return self.cluster_many([emb], [seed])[0]
+
+    # -- plans --------------------------------------------------------------
+    def plan_many(self, requests: list[PlanRequest]) -> list[SamplingPlan]:
+        """Serve MANY programs' SamplingPlans per compiled dispatch."""
+        results = self.cluster_many([r.embeddings for r in requests],
+                                    [r.seed for r in requests])
+        plans = []
+        for req, (labels, info) in zip(requests, results):
+            extra = dict(info, **req.extra)
+            plans.append(plan_from_labels(labels, req.seqs, req.method,
+                                          extra=extra))
+        return plans
+
+    def plan(self, embeddings: np.ndarray, seqs: np.ndarray, method: str = "",
+             seed: Optional[int] = None, extra: Optional[dict] = None
+             ) -> SamplingPlan:
+        return self.plan_many([PlanRequest(embeddings, seqs, method,
+                                           seed=seed, extra=extra or {})])[0]
+
+    def engine_stats(self) -> dict:
+        """Instance counters + the process-wide compile counters (the
+        process-wide dispatch counter keeps its own key so it never shadows
+        this instance's)."""
+        g = engine_stats()
+        return dict(self.stats, builds=g["builds"],
+                    cache_entries=g["cache_entries"],
+                    process_dispatches=g["dispatches"])

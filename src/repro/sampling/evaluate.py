@@ -12,10 +12,9 @@ from __future__ import annotations
 from dataclasses import asdict, dataclass, field
 
 from repro.sim.simulate import (
-    METRIC_NAMES, SamplingPlan, full_metrics, reconstruct, sim_wall_time,
-    simulate_program,
+    METRIC_NAMES, SamplingPlan, _metric_arrays, full_metrics, reconstruct,
+    sim_wall_time, simulate_program,
 )
-from repro.sim.timing import KernelMetrics
 from repro.tracing.programs import Program
 
 
@@ -45,19 +44,23 @@ class EvalResult:
         return d
 
 
-def evaluate_metrics(plan: SamplingPlan, metrics: list[KernelMetrics],
+def evaluate_metrics(plan: SamplingPlan, metrics,
                      program: str = "", platform: str = "") -> EvalResult:
-    """Evaluate a plan against already-simulated per-kernel metrics."""
-    full = full_metrics(metrics)
-    sampled = reconstruct(plan, metrics)
+    """Evaluate a plan against already-simulated per-kernel metrics
+    (``BatchKernelMetrics`` from the vectorized path, or a legacy
+    ``list[KernelMetrics]``)."""
+    m = _metric_arrays(metrics)
+    full = full_metrics(m)
+    sampled = reconstruct(plan, m)
     reps = plan.rep_indices()
     error = {
         name: abs(full[name] - sampled[name]) / max(abs(full[name]), 1e-12)
         * 100.0
         for name in METRIC_NAMES
     }
-    full_t = sum(m.time_s for m in metrics)
-    rep_t = sum(metrics[i].time_s for i in reps)
+    # sequential sums (not np pairwise) keep the golden fixture bit-stable
+    full_t = sum(m.time_s.tolist())
+    rep_t = sum(m.time_s[reps].tolist())
     return EvalResult(
         method=plan.method, program=program, platform=platform,
         num_kernels=len(metrics), num_clusters=plan.num_clusters,

@@ -24,11 +24,11 @@ import numpy as np
 from repro.core.baselines.pka import pka_features
 from repro.core.baselines.sieve import sieve_partition
 from repro.core.baselines.stem_root import stem_root_partition, stem_root_times
-from repro.core.clustering import select_k_and_cluster
 from repro.core.sampler import GCLSampler, GCLSamplerConfig
 from repro.sampling.base import (
     Artifacts, SamplingMethod, config_hash, plan_from_labels,
 )
+from repro.sampling.engine import PlanEngine, PlanRequest
 from repro.sampling.registry import register_method
 from repro.sampling.store import program_fingerprint
 from repro.sim.simulate import SamplingPlan
@@ -191,16 +191,24 @@ class GCLMethod(SamplingMethod):
             provenance=self._encoder_provenance(program_fingerprint(program)))
 
     def plan(self, program: Program, artifacts: Artifacts) -> SamplingPlan:
+        return self.plan_batch([(program, artifacts)])[0]
+
+    def plan_batch(self, items: list) -> list[SamplingPlan]:
+        """All programs of the batch through the compiled planning engine:
+        one multi-K sweep dispatch per embedding-size bucket, `use_pallas`
+        threaded through from the RGCN config."""
         t0 = time.time()
-        emb = np.asarray(artifacts.payload["embeddings"])
-        seqs = np.asarray(artifacts.payload["seqs"])
-        labels, info = select_k_and_cluster(
-            emb, k_max=self.cfg.k_max, seed=self.cfg.train.seed)
-        plan = plan_from_labels(labels, seqs, self.display_name, extra=info)
-        plan.extra["timings"] = dict(artifacts.timings,
-                                     cluster_s=time.time() - t0)
-        plan.extra.update(artifacts.meta)
-        return plan
+        engine = self.sampler.plan_engine()
+        plans = engine.plan_many([
+            PlanRequest(np.asarray(a.payload["embeddings"]),
+                        np.asarray(a.payload["seqs"]), self.display_name)
+            for _, a in items])
+        cluster_s = (time.time() - t0) / max(len(items), 1)
+        for (_, artifacts), plan in zip(items, plans):
+            plan.extra["timings"] = dict(artifacts.timings,
+                                         cluster_s=cluster_s)
+            plan.extra.update(artifacts.meta)
+        return plans
 
     def adopt(self, artifacts: Artifacts) -> None:
         params = artifacts.payload.get("params")
@@ -231,15 +239,20 @@ class PKAMethod(SamplingMethod):
                           {"features_s": time.time() - t0})
 
     def plan(self, program: Program, artifacts: Artifacts) -> SamplingPlan:
+        return self.plan_batch([(program, artifacts)])[0]
+
+    def plan_batch(self, items: list) -> list[SamplingPlan]:
         t0 = time.time()
-        labels, info = select_k_and_cluster(
-            np.asarray(artifacts.payload["features"]),
-            k_max=self.k_max, seed=self.seed)
-        plan = plan_from_labels(labels, _seqs(program), self.display_name,
-                                extra=info)
-        plan.extra["timings"] = dict(artifacts.timings,
-                                     cluster_s=time.time() - t0)
-        return plan
+        engine = PlanEngine(k_max=self.k_max, seed=self.seed)
+        plans = engine.plan_many([
+            PlanRequest(np.asarray(a.payload["features"]), _seqs(p),
+                        self.display_name)
+            for p, a in items])
+        cluster_s = (time.time() - t0) / max(len(items), 1)
+        for (_, artifacts), plan in zip(items, plans):
+            plan.extra["timings"] = dict(artifacts.timings,
+                                         cluster_s=cluster_s)
+        return plans
 
 
 @register_method

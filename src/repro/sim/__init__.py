@@ -1,5 +1,8 @@
 from repro.sim.hardware import PLATFORMS, HardwareConfig
-from repro.sim.timing import simulate_kernel, KernelMetrics
+from repro.sim.timing import (
+    BatchKernelMetrics, KernelMetrics, StackedKernelStats, simulate_batch,
+    simulate_kernel, stack_stats,
+)
 from repro.sim.simulate import (
     simulate_program, reconstruct, sampling_error, speedup, SamplingPlan,
 )

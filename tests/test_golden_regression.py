@@ -27,7 +27,8 @@ from repro.launch.sample import run_grid, validate_results
 FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
                        "golden_results.json")
 # wall-clock / environment-dependent fields, not part of the golden contract
-IGNORE_KEYS = {"created_unix", "wall_time_s", "fit_s", "timings"}
+IGNORE_KEYS = {"created_unix", "wall_time_s", "fit_s", "timings",
+               "batch_plan_errors"}  # diagnostics, not golden numerics
 RTOL = 1e-6
 
 

@@ -15,8 +15,12 @@ import pytest
 
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.kmeans_assign.ops import kmeans_assign
-from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+from repro.kernels.kmeans_assign.ops import (
+    kmeans_assign, kmeans_assign_fused, silhouette_sums,
+)
+from repro.kernels.kmeans_assign.ref import (
+    kmeans_assign_fused_ref, kmeans_assign_ref, silhouette_sums_ref,
+)
 from repro.kernels.rgcn_spmm.ops import rgcn_message_agg, rgcn_message_agg_flat
 from repro.kernels.rgcn_spmm.ref import (
     rgcn_message_agg_flat_ref, rgcn_message_agg_ref,
@@ -165,6 +169,49 @@ def test_kmeans_assign_bf16_separated():
     labels, _ = kmeans_assign(jnp.asarray(x, BF16), jnp.asarray(cent, BF16),
                               block_n=32, interpret=True)
     np.testing.assert_array_equal(np.asarray(labels), want)
+
+
+@pytest.mark.parametrize("n,d,k,block_n,dead,pad", [
+    (100, 16, 4, 32, 0, 0),
+    (257, 24, 6, 128, 2, 17),    # masked centroid slots + padded points
+    (64, 8, 3, 64, 1, 5),        # single block
+    (7, 8, 5, 64, 0, 3),         # n < block, pad > live points per cluster
+])
+def test_kmeans_assign_fused_parity(n, d, k, block_n, dead, pad):
+    """Fused assign + min-dist + per-cluster-sum (the swept Lloyd step):
+    labels/dists/sums/counts against the oracle, with dead centroid slots
+    and padded points masked out."""
+    ks = jax.random.split(jax.random.PRNGKey(n + d), 2)
+    x = jax.random.normal(ks[0], (n, d))
+    cent = jax.random.normal(ks[1], (k, d))
+    cmask = jnp.where(jnp.arange(k) < k - dead, 1.0, 0.0)
+    pmask = jnp.where(jnp.arange(n) < n - pad, 1.0, 0.0)
+    lab, dist, sums, cnts = kmeans_assign_fused(
+        x, cent, cmask, pmask, block_n=block_n, interpret=True)
+    rl, rd, rs, rc = kmeans_assign_fused_ref(x, cent, cmask, pmask)
+    np.testing.assert_array_equal(np.asarray(lab), np.asarray(rl))
+    _close(dist, rd, 1e-4)
+    _close(sums, rs, 1e-4)
+    _close(cnts, rc, 1e-6)
+    # dead slots never win; padded points contribute nothing
+    assert int(np.asarray(lab).max()) < k - dead or dead == 0
+    assert float(np.asarray(cnts).sum()) == pytest.approx(n - pad)
+
+
+@pytest.mark.parametrize("n,k,d,block_n", [
+    (96, 4, 16, 32), (200, 6, 8, 128), (33, 3, 12, 64),
+])
+def test_silhouette_sums_parity(n, k, d, block_n):
+    """Blocked silhouette accumulator vs the full-matrix oracle (the n x n
+    distance matrix never materializes in the kernel)."""
+    ks = jax.random.split(jax.random.PRNGKey(n), 2)
+    x = jax.random.normal(ks[0], (n, d))
+    lab = jax.random.randint(ks[1], (n,), 0, k)
+    mask = jnp.where(jnp.arange(n) < n - 3, 1.0, 0.0)
+    onehot = jax.nn.one_hot(lab, k) * mask[:, None]
+    got = silhouette_sums(x, onehot, block_n=block_n, interpret=True)
+    want = silhouette_sums_ref(x, onehot)
+    _close(got, want, 1e-3)
 
 
 # ---------------------------------------------------------------------------

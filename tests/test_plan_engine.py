@@ -1,0 +1,287 @@
+"""Planning-engine parity suite (DESIGN.md §8).
+
+Pins the compiled multi-K sweep to the sequential reference —
+labels/K/silhouette identical request-for-request — plus the vectorized
+timing model against the scalar shim, the PlanEngine batching layer, and
+mask-aware Lloyd properties (empty clusters, k >= n, duplicates)."""
+
+import numpy as np
+import pytest
+
+from repro.core import clustering
+from repro.core.clustering import (
+    select_k_and_cluster, select_k_and_cluster_swept, sweep_cluster_stack,
+)
+from repro.sampling.engine import PlanEngine, PlanRequest
+
+
+def _blobs(k, n_per, d, seed, scale=50.0, sigma=0.5):
+    r = np.random.default_rng(seed)
+    c = r.standard_normal((k, d)) * scale
+    return np.concatenate(
+        [ci + r.standard_normal((n_per, d)) * sigma for ci in c]
+    ).astype(np.float32)
+
+
+def _assert_same(x, seq_kw=None, **kw):
+    """Swept and sequential must agree exactly on labels and K and to 1e-5
+    on the silhouette (the blocked accumulation reorders fp sums)."""
+    seq_only = {k: v for k, v in dict(kw, **(seq_kw or {})).items()
+                if k != "sil_block"}  # sweep-only knob
+    l1, i1 = select_k_and_cluster(x, **seq_only)
+    l2, i2 = select_k_and_cluster_swept(x, **kw)
+    assert i1["k"] == i2["k"], (i1, i2)
+    np.testing.assert_array_equal(l1, l2)
+    assert abs(i1["sil"] - i2["sil"]) < 1e-5
+    assert i1["mode"] == i2["mode"]
+    return l2, i2
+
+
+# -- swept vs sequential clustering parity ----------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("k_true,n_per,d", [(3, 20, 16), (5, 30, 8),
+                                            (2, 50, 32)])
+def test_sweep_matches_sequential_blobs(seed, k_true, n_per, d):
+    x = _blobs(k_true, n_per, d, seed)
+    _, info = _assert_same(x, k_max=12, seed=seed)
+    assert info["k"] == k_true
+    assert info["engine"] == "sweep"
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sweep_matches_sequential_unstructured(seed):
+    """No blob structure -> both paths take the same weak->K=1 collapse."""
+    x = np.random.default_rng(seed).standard_normal((80, 12)).astype(np.float32)
+    _assert_same(x, k_max=10, seed=seed)
+
+
+def test_identical_embeddings_collapse_to_one_cluster():
+    x = np.ones((50, 8), np.float32)
+    labels, info = select_k_and_cluster_swept(x, seed=0)
+    assert info["k"] == 1 and info["mode"] == "degenerate"
+    assert labels.max() == 0
+    _assert_same(x, seed=0)
+
+
+def test_tiny_n_agglomeration_fallback():
+    x = np.array([[0.0, 0.0], [0.01, 0.0], [10.0, 10.0]], np.float32)
+    labels, info = select_k_and_cluster_swept(x)
+    assert info["k"] == 2 and info["mode"] == "tiny"
+    assert labels[0] == labels[1] != labels[2]
+    _assert_same(x)
+
+
+def test_trivial_sizes():
+    for n in (0, 1):
+        x = np.zeros((n, 4), np.float32)
+        labels, info = select_k_and_cluster_swept(x)
+        assert info["mode"] == "trivial" and len(labels) == n
+
+
+def test_sil_cap_subsampling_parity():
+    """n > sil_cap: both paths score silhouette on the SAME deterministic
+    subsample and still agree exactly."""
+    x = _blobs(4, 60, 8, seed=7)
+    _, info = _assert_same(x, k_max=8, seed=3, sil_cap=100)
+    assert info["k"] == 4
+
+
+def test_device_init_parity():
+    """On-device kmeans++ (fold-in RNG): sequential reference and swept
+    engine draw identical seeds and produce identical labels."""
+    x = _blobs(4, 30, 8, seed=11)
+    _, info = _assert_same(x, k_max=10, seed=2, init="device")
+    assert info["k"] == 4
+
+
+def test_device_init_independent_of_batch_composition():
+    """A program's device-init draw happens at its OWN points bucket, so
+    riding in a batch next to a much larger program changes nothing."""
+    small = _blobs(3, 10, 8, seed=1)        # bucket 32
+    big = _blobs(4, 60, 8, seed=2)          # bucket 256
+    solo = select_k_and_cluster_swept(small, k_max=8, seed=3, init="device")
+    batched = sweep_cluster_stack([small, big], k_max=8, seed=3,
+                                  init="device")[0]
+    np.testing.assert_array_equal(solo[0], batched[0])
+    assert solo[1]["k"] == batched[1]["k"]
+
+
+def test_non_divisor_sil_block_drops_no_columns():
+    """sil_block that doesn't divide the points bucket must be rounded
+    down, not silently truncate the silhouette accumulation."""
+    x = _blobs(3, 40, 8, seed=13)           # n=120 -> bucket 128
+    _, info = _assert_same(x, k_max=8, seed=0, seq_kw={}, sil_block=100)
+    assert info["k"] == 3
+
+
+def test_swept_pallas_matches_sequential():
+    """Fused kmeans_assign + blocked silhouette kernels (interpret on CPU)
+    inside the sweep reproduce the sequential labels."""
+    x = _blobs(3, 12, 8, seed=5)
+    l1, i1 = select_k_and_cluster(x, k_max=6, seed=0, iters=8)
+    l2, i2 = select_k_and_cluster_swept(x, k_max=6, seed=0, iters=8,
+                                        use_pallas=True)
+    assert i1["k"] == i2["k"]
+    np.testing.assert_array_equal(l1, l2)
+
+
+# -- mask-aware Lloyd properties --------------------------------------------
+
+def test_batch_stack_equals_single_dispatch():
+    """Stacked (padded, masked) programs return exactly the per-program
+    results — padding rows never leak into labels or scores."""
+    xs = [_blobs(3, n_per, 16, seed) for seed, n_per in
+          enumerate([10, 17, 25, 31, 8])]
+    outs = sweep_cluster_stack(xs, k_max=10, seed=1)
+    for x, (lb, ib) in zip(xs, outs):
+        ls, is_ = select_k_and_cluster_swept(x, k_max=10, seed=1)
+        np.testing.assert_array_equal(lb, ls)
+        assert ib["k"] == is_["k"]
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # dev-only dep (requirements-dev.txt)
+    HAVE_HYP = False
+
+
+if HAVE_HYP:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(5, 20), st.integers(2, 4), st.integers(0, 100))
+    def test_lloyd_k_near_n_and_empty_clusters(n, distinct, seed):
+        """k candidates up to k_max > n with few distinct points: empty
+        clusters keep their centroids (no NaNs), invalid candidates
+        (k > n-1) are masked, and the result still matches the sequential
+        reference."""
+        rng = np.random.default_rng(seed)
+        base = rng.standard_normal((distinct, 6)).astype(np.float32) * 10
+        x = base[rng.integers(0, distinct, n)] + \
+            rng.standard_normal((n, 6)).astype(np.float32) * 0.01
+        l1, i1 = select_k_and_cluster(x, k_max=24, seed=seed)
+        l2, i2 = select_k_and_cluster_swept(x, k_max=24, seed=seed)
+        assert i1["k"] == i2["k"]
+        np.testing.assert_array_equal(l1, l2)
+        assert np.isfinite(i2["sil"])
+        # labels compact: every cluster id in [0, k) occupied
+        assert set(np.unique(l2)) == set(range(i2["k"]))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(12, 40), st.integers(0, 100))
+    def test_swept_scores_match_sequential_scores(n, seed):
+        """Per-candidate silhouette scores (not just the argmax) agree."""
+        x = _blobs(3, n, 8, seed)
+        _, i1 = select_k_and_cluster(x, k_max=8, seed=seed)
+        _, i2 = select_k_and_cluster_swept(x, k_max=8, seed=seed)
+        s1, s2 = i1.get("scores", {}), i2.get("scores", {})
+        assert set(s1) == set(s2)
+        for k in s1:
+            assert abs(s1[k] - s2[k]) < 1e-4, (k, s1[k], s2[k])
+
+
+# -- vectorized timing model -------------------------------------------------
+
+def test_simulate_batch_matches_scalar():
+    from repro.sim.hardware import PLATFORMS
+    from repro.sim.timing import (
+        _METRIC_FIELDS, _simulate_kernel_scalar, simulate_batch,
+        simulate_kernel, stack_stats,
+    )
+    from repro.tracing.programs import get_program
+
+    for pname in ("3mm", "bfs", "backprop"):
+        prog = get_program(pname)
+        for plat, hw in PLATFORMS.items():
+            stats = [k.stats(plat) for k in prog.kernels]
+            batch = simulate_batch(stack_stats(stats), hw)
+            assert len(batch) == len(stats)
+            for i, s in enumerate(stats):
+                ref = _simulate_kernel_scalar(s, hw)
+                shim = simulate_kernel(s, hw)
+                for f in _METRIC_FIELDS:
+                    a, b = getattr(batch[i], f), getattr(ref, f)
+                    assert abs(a - b) <= 1e-6 * max(abs(b), 1e-12), \
+                        (pname, plat, i, f, a, b)
+                    assert getattr(shim, f) == a
+
+
+def test_batch_metrics_sequence_protocol():
+    from repro.sim.simulate import full_metrics, simulate_program
+    from repro.sim.timing import BatchKernelMetrics, KernelMetrics
+    from repro.tracing.programs import get_program
+
+    m = simulate_program(get_program("3mm"), "P1")
+    assert isinstance(m, BatchKernelMetrics)
+    assert isinstance(m[0], KernelMetrics)
+    as_list = m.tolist()
+    assert len(as_list) == len(m)
+    # legacy list-of-KernelMetrics consumers see identical aggregates
+    assert full_metrics(as_list) == full_metrics(m)
+
+
+# -- PlanEngine layer --------------------------------------------------------
+
+def test_plan_engine_many_matches_single():
+    xs = [_blobs(3, 15, 16, s) for s in range(4)]
+    reqs = [PlanRequest(x, np.arange(len(x)), "t", seed=i)
+            for i, x in enumerate(xs)]
+    eng = PlanEngine(k_max=8)
+    plans = eng.plan_many(reqs)
+    for i, (x, plan) in enumerate(zip(xs, plans)):
+        solo = PlanEngine(k_max=8).plan(x, np.arange(len(x)), "t", seed=i)
+        np.testing.assert_array_equal(plan.labels, solo.labels)
+        assert plan.reps == solo.reps
+    st_ = eng.engine_stats()
+    assert st_["programs"] == 4
+    # same sizes -> one bucket -> one compiled dispatch for all four
+    assert st_["dispatches"] == 1
+
+
+def test_plan_engine_respects_max_batch_and_buckets():
+    xs = [_blobs(2, n, 8, s) for s, n in enumerate([10, 12, 40, 45, 44])]
+    eng = PlanEngine(k_max=6, max_batch=2)
+    eng.plan_many([PlanRequest(x, np.arange(len(x)), "t") for x in xs])
+    st_ = eng.engine_stats()
+    # bucket (32, 8): 2 programs -> 1 dispatch; bucket (128, 8): 3
+    # programs at max_batch=2 -> 2 dispatches
+    assert st_["dispatches"] == 3
+    assert st_["programs"] == 5
+
+
+def test_plan_engine_sequential_mode_identical():
+    x = _blobs(3, 20, 8, seed=9)
+    sweep = PlanEngine(k_max=8).plan(x, np.arange(len(x)), "t")
+    seq = PlanEngine(k_max=8, engine="sequential").plan(
+        x, np.arange(len(x)), "t")
+    np.testing.assert_array_equal(sweep.labels, seq.labels)
+    assert sweep.reps == seq.reps
+
+
+def test_second_program_never_recompiles():
+    """Same-bucket programs share one executable: the acceptance check."""
+    eng = PlanEngine(k_max=8)
+    eng.cluster(_blobs(3, 14, 16, 0), seed=0)
+    builds = clustering.ENGINE_STATS["builds"]
+    eng.cluster(_blobs(4, 10, 16, 1), seed=1)   # same (64, 16) bucket
+    assert clustering.ENGINE_STATS["builds"] == builds
+
+
+def test_gcl_sampler_cluster_routes_through_engine():
+    from repro.core.sampler import GCLSampler, GCLSamplerConfig
+
+    x = _blobs(3, 15, 16, seed=4)
+    sampler = GCLSampler(GCLSamplerConfig(k_max=8))
+    plan = sampler.cluster(x, np.arange(len(x)))
+    assert plan.method == "GCL-Sampler"
+    assert plan.extra.get("engine") == "sweep"
+    assert plan.num_clusters == 3
+
+
+def test_use_pallas_threads_from_rgcn_config():
+    from repro.core.rgcn import RGCNConfig
+    from repro.core.sampler import GCLSampler, GCLSamplerConfig
+
+    cfg = GCLSamplerConfig(k_max=6, rgcn=RGCNConfig(use_pallas=True))
+    assert GCLSampler(cfg).plan_engine().cfg.use_pallas is True
+    assert GCLSampler(GCLSamplerConfig()).plan_engine().cfg.use_pallas is False
