@@ -1,0 +1,274 @@
+"""Plan-serving SLO benchmark: continuous batching + warm executable pool.
+
+Drives :class:`repro.serving.PlanService` (DESIGN.md §9) with open-loop
+Poisson traffic (latency measured from the *scheduled* arrival — no
+coordinated omission) and reports the serving headlines:
+
+- **cold vs warm**: the same offered load served from a pristine
+  executable cache (first requests pay the sweep compiles) vs after
+  ``warmup`` pre-built the pool — p99 ratio is the warm-pool win;
+- **continuous batching vs dispatch-per-request**: the same loads served
+  with the fill-or-deadline batcher (``max_batch=8``) vs a degenerate
+  ``max_batch=1`` service — plans/s at the highest load is the batching
+  win;
+- **load sweep**: p50/p99 plan latency, plans/s, queue depth, batch
+  occupancy and flush causes at offered loads expressed as multiples of
+  the measured dispatch-per-request capacity;
+- **parity**: served plans vs the sequential reference
+  (`select_k_and_cluster` + `plan_from_labels`) — labels/K/reps must be
+  identical request-for-request;
+- **plan-build overlap**: ``overlap_plan_build`` on vs off through
+  ``PlanEngine.plan_many`` (host representative scan hidden behind the
+  next chunk's device dispatch).
+
+Results go to ``benchmarks/results/serve_latency.json`` AND a repo-root
+``BENCH_serve_latency.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import save_results
+from repro.core import clustering
+from repro.core.clustering import select_k_and_cluster
+from repro.sampling.base import plan_from_labels
+from repro.sampling.engine import (
+    PlanEngine, PlanRequest, bucket_key, normalize_embeddings,
+)
+from repro.serving import PlanService, run_open_loop, synthetic_fleet
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _closed_loop_capacity(engine: PlanEngine, fleet, n_rounds: int = 2):
+    """Best-of closed-loop plans/s through ``plan_many`` (warm)."""
+    best = 0.0
+    for _ in range(n_rounds):
+        t0 = time.perf_counter()
+        engine.plan_many([PlanRequest(r.embeddings, r.seqs, r.method,
+                                      seed=r.seed) for r in fleet])
+        best = max(best, len(fleet) / (time.perf_counter() - t0))
+    return best
+
+
+def run(n_requests: int = 240, d: int = 16, k_max: int = 8, iters: int = 10,
+        max_batch: int = 8, max_delay_ms: float = 4.0,
+        load_factors=(0.5, 1.0, 3.0), cold_rate: float = 50.0,
+        fast: bool = False, verbose: bool = True) -> dict:
+    if fast:  # benchmarks.run / CI entry point
+        n_requests, load_factors, cold_rate = 80, (0.5, 3.0), 30.0
+
+    fleet = synthetic_fleet(n_requests, d=d, seed=0)
+    buckets = sorted({bucket_key(r.embeddings) for r in fleet})
+    svc_kw = dict(max_batch=max_batch, max_delay_ms=max_delay_ms,
+                  k_max=k_max, iters=iters)
+    subset = fleet[:min(24 if fast else 48, n_requests)]
+
+    # -- cold vs warm (same offered load, same requests) ---------------------
+    # Cold FIRST: a pristine process-wide cache means the first dispatches
+    # pay the sweep compiles on the serving path.
+    clustering._ENGINE_CACHE.clear()
+    clustering.reset_engine_stats()
+    with PlanService(**svc_kw) as svc:
+        cold = run_open_loop(svc, subset, cold_rate, seed=1)
+    cold_builds = clustering.ENGINE_STATS["builds"]
+    if verbose:
+        print(f"[serve-latency] cold @ {cold_rate:.0f}/s: "
+              f"p99 {cold.latency_ms['p99']:.0f}ms "
+              f"({cold_builds} builds on-path)", flush=True)
+
+    with PlanService(**svc_kw) as svc:
+        t0 = time.perf_counter()
+        warmed = svc.warmup(buckets)
+        warmup_s = time.perf_counter() - t0
+        builds0 = clustering.ENGINE_STATS["builds"]
+        warm = run_open_loop(svc, subset, cold_rate, seed=1)
+        warm_builds_during_serving = clustering.ENGINE_STATS["builds"] - builds0
+    cold_vs_warm = {
+        "offered_per_s": cold_rate, "n_requests": len(subset),
+        "warmed_executables": warmed, "warmup_s": warmup_s,
+        "cold_builds_on_path": cold_builds,
+        "warm_builds_during_serving": warm_builds_during_serving,
+        "cold": cold.to_json(), "warm": warm.to_json(),
+        "p99_ratio": cold.latency_ms["p99"] / max(warm.latency_ms["p99"], 1e-9),
+    }
+    if verbose:
+        print(f"[serve-latency] warm @ {cold_rate:.0f}/s: "
+              f"p99 {warm.latency_ms['p99']:.1f}ms -> cold/warm p99 ratio "
+              f"{cold_vs_warm['p99_ratio']:.1f}x "
+              f"({warmed} warmed in {warmup_s:.1f}s, "
+              f"{warm_builds_during_serving} builds while serving)",
+              flush=True)
+
+    # -- capacity probes (closed loop, warm) ---------------------------------
+    eng_per_req = PlanEngine(k_max=k_max, iters=iters, max_batch=1)
+    eng_batched = PlanEngine(k_max=k_max, iters=iters, max_batch=max_batch)
+    per_req_cap = _closed_loop_capacity(eng_per_req, fleet)
+    batched_cap = _closed_loop_capacity(eng_batched, fleet)
+    capacity = {
+        "per_request_plans_per_s": per_req_cap,
+        "batched_plans_per_s": batched_cap,
+        "batched_over_per_request": batched_cap / max(per_req_cap, 1e-9),
+    }
+    if verbose:
+        print(f"[serve-latency] capacity: per-request {per_req_cap:.0f}/s, "
+              f"batched {batched_cap:.0f}/s "
+              f"({capacity['batched_over_per_request']:.1f}x)", flush=True)
+
+    # -- load sweep: batcher vs dispatch-per-request -------------------------
+    loads = []
+    with PlanService(**svc_kw) as svc_b, \
+            PlanService(max_batch=1, max_delay_ms=0.0,
+                        k_max=k_max, iters=iters) as svc_1:
+        for f in load_factors:
+            rate = f * per_req_cap
+            row = {"factor": float(f), "offered_per_s": rate}
+            for name, svc in (("batched", svc_b), ("per_request", svc_1)):
+                res = run_open_loop(svc, fleet, rate, seed=int(f * 10) + 2)
+                row[name] = res.to_json()
+                if verbose:
+                    s = res.service
+                    print(f"[serve-latency] {f:.1f}x ({rate:.0f}/s) {name}: "
+                          f"{res.plans_per_s:.0f} plans/s, "
+                          f"p50 {res.latency_ms['p50']:.1f}ms, "
+                          f"p99 {res.latency_ms['p99']:.1f}ms, "
+                          f"occ {s['batch_occupancy'] or 0:.2f}, "
+                          f"queue {s['mean_queue_depth']:.1f}", flush=True)
+            row["plans_per_s_ratio"] = (
+                row["batched"]["plans_per_s"]
+                / max(row["per_request"]["plans_per_s"], 1e-9))
+            loads.append(row)
+    batching_speedup = loads[-1]["plans_per_s_ratio"]
+
+    # -- parity: served plans vs the sequential reference --------------------
+    par = fleet[:6 if fast else 10]
+    with PlanService(**svc_kw) as svc:
+        plans = [f.result() for f in [svc.submit(r) for r in par]]
+    kw = dict(k_max=k_max, iters=iters)
+    labels_ok = k_ok = reps_ok = 0
+    for req, plan in zip(par, plans):
+        labels, info = select_k_and_cluster(
+            normalize_embeddings(req.embeddings), seed=req.seed, **kw)
+        ref = plan_from_labels(labels, req.seqs, req.method, extra=info)
+        labels_ok += int(np.array_equal(ref.labels, plan.labels))
+        k_ok += int(info["k"] == plan.extra["k"])
+        reps_ok += int(ref.reps == plan.reps)
+    parity = {"requests": len(par), "labels_identical": labels_ok,
+              "k_identical": k_ok, "reps_identical": reps_ok}
+    if verbose:
+        print(f"[serve-latency] parity: {labels_ok}/{len(par)} labels, "
+              f"{reps_ok}/{len(par)} reps identical", flush=True)
+
+    # -- plan-build overlap on/off (satellite micro-opt) ---------------------
+    # Measured on LARGER programs than the serving fleet: the win is bounded
+    # by the host representative-scan's share of a chunk's wall time, which
+    # is negligible at 20-60 points and a few percent at thousands.
+    rng = np.random.default_rng(7)
+    reqs = []
+    n_lo, n_hi = (400, 900) if fast else (1500, 3500)
+    for i in range(12 if fast else 24):
+        n = int(rng.integers(n_lo, n_hi))
+        k = int(rng.integers(3, 7))
+        centers = rng.standard_normal((k, d)) * 40.0
+        x = (centers[rng.integers(0, k, n)]
+             + rng.standard_normal((n, d)) * 0.5).astype(np.float32)
+        reqs.append(PlanRequest(x, np.arange(n), "micro", seed=i))
+    micro = {"n_requests": len(reqs), "points": [n_lo, n_hi]}
+    for name, flag in (("overlap", True), ("serial", False)):
+        eng = PlanEngine(k_max=k_max, iters=iters, max_batch=max_batch,
+                         overlap_plan_build=flag)
+        eng.plan_many(reqs)  # compile/warm pass, untimed
+        times = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            eng.plan_many(reqs)
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        micro[f"{name}_s"] = times[len(times) // 2]  # median of 5
+        micro[f"{name}_min_s"] = times[0]
+    micro["speedup"] = micro["serial_s"] / max(micro["overlap_s"], 1e-9)
+    if verbose:
+        print(f"[serve-latency] plan-build overlap: "
+              f"{micro['serial_s'] * 1e3:.0f}ms serial -> "
+              f"{micro['overlap_s'] * 1e3:.0f}ms overlapped "
+              f"({micro['speedup']:.2f}x)", flush=True)
+
+    doc = {
+        "settings": {"n_requests": n_requests, "d": d, "k_max": k_max,
+                     "iters": iters, "max_batch": max_batch,
+                     "max_delay_ms": max_delay_ms,
+                     "load_factors": list(load_factors),
+                     "cold_rate": cold_rate},
+        "buckets": [list(b) for b in buckets],
+        "cold_vs_warm": cold_vs_warm,
+        "capacity": capacity,
+        "loads": loads,
+        "batching_speedup_high_load": batching_speedup,
+        "parity": parity,
+        "plan_build_overlap": micro,
+    }
+    if verbose:
+        print(f"[serve-latency] headlines: warm-pool p99 "
+              f"{cold_vs_warm['p99_ratio']:.1f}x lower, batching "
+              f"{batching_speedup:.1f}x plans/s at "
+              f"{load_factors[-1]:.1f}x load", flush=True)
+
+    save_results("serve_latency", doc)
+    bench_path = os.path.join(REPO_ROOT, "BENCH_serve_latency.json")
+    with open(bench_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    if verbose:
+        print(f"[serve-latency] wrote {bench_path}", flush=True)
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_serve_latency")
+    ap.add_argument("--n-requests", type=int, default=240)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--k-max", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-delay-ms", type=float, default=4.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer requests, two loads)")
+    ap.add_argument("--min-warm-p99-ratio", type=float, default=0.0,
+                    help="exit non-zero if cold/warm p99 falls below this")
+    ap.add_argument("--min-batch-speedup", type=float, default=0.0,
+                    help="exit non-zero if batched/per-request plans/s at "
+                         "the highest load falls below this")
+    args = ap.parse_args(argv)
+    doc = run(n_requests=args.n_requests, d=args.d, k_max=args.k_max,
+              iters=args.iters, max_batch=args.max_batch,
+              max_delay_ms=args.max_delay_ms, fast=args.smoke)
+    bad = []
+    r = doc["cold_vs_warm"]["p99_ratio"]
+    if args.min_warm_p99_ratio and r < args.min_warm_p99_ratio:
+        bad.append(f"warm-pool p99 ratio {r:.2f}x < "
+                   f"{args.min_warm_p99_ratio:.2f}x")
+    s = doc["batching_speedup_high_load"]
+    if args.min_batch_speedup and s < args.min_batch_speedup:
+        bad.append(f"batching speedup {s:.2f}x < "
+                   f"{args.min_batch_speedup:.2f}x")
+    if doc["cold_vs_warm"]["warm_builds_during_serving"] != 0:
+        bad.append(f"warm pool leaked "
+                   f"{doc['cold_vs_warm']['warm_builds_during_serving']} "
+                   f"builds onto the serving path (want 0)")
+    p = doc["parity"]
+    if (p["labels_identical"] != p["requests"]
+            or p["reps_identical"] != p["requests"]):
+        bad.append(f"parity broken: {p}")
+    if bad:
+        print("FAIL: " + "; ".join(bad))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

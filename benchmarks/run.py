@@ -19,7 +19,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-sized runs (all 11 programs, long training)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig45,table3,fig6,e2e,traincost,roofline")
+                    help="comma list: fig45,table3,fig6,e2e,traincost,"
+                         "plans,serve,roofline")
     args = ap.parse_args()
     fast = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -49,7 +50,7 @@ def main() -> None:
     from benchmarks import (
         bench_ablations, bench_accuracy_speedup, bench_crossarch,
         bench_e2e_sim, bench_microarch, bench_plan_throughput,
-        bench_roofline, bench_train_throughput,
+        bench_roofline, bench_serve_latency, bench_train_throughput,
     )
 
     bench("fig45", bench_accuracy_speedup.run, programs=programs, fast=fast)
@@ -60,6 +61,7 @@ def main() -> None:
           fast=fast)
     bench("traincost", bench_train_throughput.run, fast=fast)
     bench("plans", bench_plan_throughput.run, fast=fast)
+    bench("serve", bench_serve_latency.run, fast=fast)
     if args.full or (only and "ablations" in only):
         bench("ablations", bench_ablations.run, fast=True)
     bench("roofline", bench_roofline.run)
@@ -95,6 +97,10 @@ def _derive(name, out) -> str:
             )
             full_err = max(r["full"]["error_pct"] for r in out.values())
             return f"full_err={full_err:.2f}%;worst_ablation_err={worst:.2f}%"
+        if name == "serve":
+            return (f"warm_p99_ratio={out['cold_vs_warm']['p99_ratio']:.1f}x"
+                    f";batch_speedup="
+                    f"{out['batching_speedup_high_load']:.1f}x")
         if name == "roofline":
             n = len(out)
             dom = {}

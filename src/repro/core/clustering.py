@@ -244,6 +244,26 @@ def bucket_points(n: int) -> int:
     return b
 
 
+def bucket_batch(n: int) -> int:
+    """Power-of-two batch-axis padding for a chunk of n programs (all-zero
+    pmask rows are inert), so odd chunk/tail sizes share an executable."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+def _round_sil_block(n_pad: int, sil_block: int) -> int:
+    """Largest power-of-two block <= sil_block that divides the pow2 points
+    bucket (a non-divisor block would silently drop distance columns).
+    Shared by the sweep and the warm-pool pre-build so both resolve the
+    SAME executable cache key."""
+    blk = min(sil_block, n_pad)
+    while n_pad % blk:
+        blk &= blk - 1  # largest power of two <= blk
+    return blk
+
+
 def _device_kmeanspp(x, pmask, key, k_up: int):
     """On-device kmeans++ (D^2 sampling) over the masked points, fold-in
     RNG per draw.  Returns (k_up,) int32 indices; the first k entries are a
@@ -266,11 +286,8 @@ def _device_kmeanspp(x, pmask, key, k_up: int):
     return idx
 
 
-@functools.partial(jax.jit, static_argnames=("k_up", "n_pad"))
-def _device_init_padded(x, seed, k_up: int, n_pad: int):
-    n = x.shape[0]
-    xp = jnp.pad(x, ((0, n_pad - n), (0, 0)))
-    pmask = (jnp.arange(n_pad) < n).astype(x.dtype)
+@functools.partial(jax.jit, static_argnames=("k_up",))
+def _device_init_padded(xp, pmask, seed, k_up: int):
     key = jax.random.PRNGKey(seed)
     return _device_kmeanspp(xp, pmask, key, k_up)
 
@@ -278,10 +295,17 @@ def _device_init_padded(x, seed, k_up: int, n_pad: int):
 def device_init_indices(x: np.ndarray, seed: int, k_up: int) -> np.ndarray:
     """Host entry point for the on-device kmeans++ seeding, evaluated at the
     padded bucket shape so the sequential reference and the swept engine
-    draw IDENTICAL indices (categorical sampling is shape-dependent)."""
+    draw IDENTICAL indices (categorical sampling is shape-dependent).
+    Padding happens on the HOST so the executable is keyed on the bucket
+    shape, not the raw n — any program of a bucket (with k_up = k_max)
+    reuses one compiled init, and the warm pool can pre-build it."""
     x = np.asarray(x, np.float32)
-    idx = _device_init_padded(jnp.asarray(x), seed, k_up,
-                              bucket_points(len(x)))
+    n = len(x)
+    n_pad = bucket_points(n)
+    xp = np.zeros((n_pad, x.shape[1]), np.float32)
+    xp[:n] = x
+    pmask = (np.arange(n_pad) < n).astype(np.float32)
+    idx = _device_init_padded(jnp.asarray(xp), jnp.asarray(pmask), seed, k_up)
     return np.asarray(idx)
 
 
@@ -412,6 +436,40 @@ def _sweep_fn(batch: int, n_pad: int, d: int, k_max: int, iters: int,
     return fn
 
 
+def warm_sweep(batch: int, n_pad: int, d: int, k_max: int = 48,
+               iters: int = 50, use_pallas: bool = False, init: str = "host",
+               sil_block: int = 512) -> int:
+    """Executable PRE-BUILD entry point for the warm pool: compile the swept
+    executable for one ``(batch, points-bucket, dim)`` cache key off the
+    serving path, so the first real request of a bucket never pays the
+    compile.  The jitted sweep is driven once on inert inputs (all-zero
+    ``pmask`` — every candidate is masked invalid and the junk outputs are
+    discarded), which populates the same process-wide cache the serving
+    dispatches hit.  Dispatch counters are NOT bumped — ``builds`` counts
+    the compile as usual.  Returns the number of NEW executables built
+    (0 when the key was already warm)."""
+    B = bucket_batch(max(batch, 1))
+    n_pad = bucket_points(n_pad)
+    blk = _round_sil_block(n_pad, sil_block)
+    before = ENGINE_STATS["builds"]
+    fn = _sweep_fn(B, n_pad, d, k_max, iters, use_pallas, blk)
+    shape = ((B, n_pad, d), (B, n_pad), (B, k_max), (B, n_pad))
+    if B == 1:
+        shape = tuple(s[1:] for s in shape)
+    args = (jnp.zeros(shape[0], jnp.float32), jnp.zeros(shape[1], jnp.float32),
+            jnp.zeros(shape[2], jnp.int32), jnp.zeros(shape[3], jnp.float32))
+    jax.block_until_ready(fn(*args))
+    if init == "device":
+        # the dominant serving case (n > k_max) resolves k_up == k_max
+        k_up = min(k_max, n_pad - 1)
+        pm = np.zeros(n_pad, np.float32)
+        pm[0] = 1.0  # one live point keeps the categorical logits finite
+        jax.block_until_ready(
+            _device_init_padded(jnp.zeros((n_pad, d), jnp.float32),
+                                jnp.asarray(pm), 0, k_up))
+    return ENGINE_STATS["builds"] - before
+
+
 def engine_stats() -> dict:
     """Snapshot of the swept-engine counters (builds = compiles)."""
     return dict(ENGINE_STATS, cache_entries=len(_ENGINE_CACHE))
@@ -474,6 +532,14 @@ def sweep_cluster_stack(
         done, sil_idx = _host_preamble(x, seeds[i], tiny_n, sil_cap)
         if done is not None:
             out[i] = done
+        elif x.ndim != 2 or x.shape[1] == 0:
+            # featureless embeddings (d == 0): every point is identical, so
+            # this is the degenerate K=1 collapse the sequential path also
+            # reaches — decided on the HOST, a zero-width matrix is never
+            # worth a device trace
+            out[i] = (np.zeros(len(x), int),
+                      {"k": 1, "sil": 0.0, "mode": "degenerate",
+                       "engine": "sweep"})
         else:
             todo.append(i)
             sil_idxs[i] = sil_idx
@@ -482,17 +548,11 @@ def sweep_cluster_stack(
 
     n_pad = bucket_points(max(len(xs[i]) for i in todo))
     d = xs[todo[0]].shape[1]
-    # a power-of-two block always divides the power-of-two bucket (a
-    # non-divisor block would silently drop distance columns)
-    blk = min(sil_block, n_pad)
-    while n_pad % blk:
-        blk &= blk - 1  # largest power of two <= blk
+    blk = _round_sil_block(n_pad, sil_block)
     # the batch axis is pow2-padded too (all-zero pmask rows are inert and
     # host-discarded), so odd chunk/tail sizes share an executable instead
     # of compiling one per distinct B
-    B = 1
-    while B < len(todo):
-        B <<= 1
+    B = bucket_batch(len(todo))
     xb = np.zeros((B, n_pad, d), np.float32)
     pmask = np.zeros((B, n_pad), np.float32)
     silm = np.zeros((B, n_pad), np.float32)

@@ -1,10 +1,15 @@
-"""Serving launcher: batched prefill + decode loop.
+"""MODEL-DECODE serving launcher: batched prefill + decode loop.
 
 ``python -m repro.launch.serve --arch mamba2-780m --smoke --tokens 32``
 
 Runs continuous batching over a synthetic request queue: prefill each batch,
 then decode N tokens per request with the KV/SSM cache, reporting per-phase
 throughput.  Full configs are exercised by the dry-run decode cells.
+
+This serves TRANSFORMER TOKENS, not sampling plans.  Plan serving — the
+continuous-batched PlanEngine service with its warm executable pool
+(DESIGN.md §9) — lives in :mod:`repro.serving` and is launched with
+``python -m repro.launch.plan_serve``.
 """
 
 from __future__ import annotations

@@ -149,6 +149,16 @@ class SamplingMethod(abc.ABC):
             self.adopt(artifacts)
         return artifacts
 
+    def plan_request(self, program: Program, artifacts: Artifacts):
+        """Engine-backed methods return the
+        :class:`~repro.sampling.engine.PlanRequest` their ``plan`` would
+        serve through the PlanEngine (embeddings + seqs + seed), letting a
+        server coalesce requests across methods and tenants
+        (``repro.serving.PlanService.submit_program``).  Methods that do
+        not plan through the engine return None — servers fall back to
+        their own ``plan``.  Default: None."""
+        return None
+
     def plan_batch(self, items: list) -> list[SamplingPlan]:
         """Plan MANY prepared programs: ``items`` is [(program, artifacts)].
 

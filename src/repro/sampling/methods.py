@@ -193,6 +193,16 @@ class GCLMethod(SamplingMethod):
     def plan(self, program: Program, artifacts: Artifacts) -> SamplingPlan:
         return self.plan_batch([(program, artifacts)])[0]
 
+    def plan_request(self, program: Program,
+                     artifacts: Artifacts) -> PlanRequest:
+        """The engine-ready request ``plan`` serves (repro.serving): same
+        embeddings/seqs/seed, artifact timings + meta riding in ``extra``."""
+        return PlanRequest(
+            np.asarray(artifacts.payload["embeddings"]),
+            np.asarray(artifacts.payload["seqs"]), self.display_name,
+            seed=self.cfg.train.seed,
+            extra=dict(artifacts.meta, timings=dict(artifacts.timings)))
+
     def plan_batch(self, items: list) -> list[SamplingPlan]:
         """All programs of the batch through the compiled planning engine:
         one multi-K sweep dispatch per embedding-size bucket, `use_pallas`
@@ -240,6 +250,13 @@ class PKAMethod(SamplingMethod):
 
     def plan(self, program: Program, artifacts: Artifacts) -> SamplingPlan:
         return self.plan_batch([(program, artifacts)])[0]
+
+    def plan_request(self, program: Program,
+                     artifacts: Artifacts) -> PlanRequest:
+        return PlanRequest(
+            np.asarray(artifacts.payload["features"]), _seqs(program),
+            self.display_name, seed=self.seed,
+            extra={"timings": dict(artifacts.timings)})
 
     def plan_batch(self, items: list) -> list[SamplingPlan]:
         t0 = time.time()

@@ -119,11 +119,24 @@ def _json_safe(obj: Any) -> Any:
 
 
 class ArtifactStore:
-    """Save/load `Artifacts` and `SamplingPlan`s under a run directory."""
+    """Save/load `Artifacts` and `SamplingPlan`s under a run directory.
 
-    def __init__(self, root: str):
+    ``cache=True`` keeps every saved/loaded artifact in an in-process map,
+    so a long-lived server replaying the same tenant's encoder
+    (``run_prepare`` -> ``load``) skips the npz round-trip after the first
+    hit (repro.serving turns this on).  Cached loads return the SAME
+    object — treat replayed artifacts as read-only (the save/load path
+    already does).  ``cache_stats`` counts hits/misses for serving
+    telemetry.  Default OFF: batch runs keep the disk as the only source
+    of truth.
+    """
+
+    def __init__(self, root: str, cache: bool = False):
         self.root = root
         os.makedirs(root, exist_ok=True)
+        self._cache: Optional[dict[tuple[str, str], Artifacts]] = (
+            {} if cache else None)
+        self.cache_stats = {"hits": 0, "misses": 0}
 
     # -- artifacts -----------------------------------------------------------
     def _artifact_dir(self, method: str, key: str) -> str:
@@ -169,13 +182,19 @@ class ArtifactStore:
         shutil.rmtree(final, ignore_errors=True)
         os.makedirs(os.path.dirname(final), exist_ok=True)
         os.rename(tmp, final)
+        if self._cache is not None:
+            self._cache[(artifacts.method, artifacts.key)] = artifacts
         return final
 
     def load(self, method: str, key: str) -> Optional[Artifacts]:
         """Returns None when absent (the prepare-or-replay idiom)."""
+        if self._cache is not None and (method, key) in self._cache:
+            self.cache_stats["hits"] += 1
+            return self._cache[(method, key)]
         d = self._artifact_dir(method, key)
         if not self.has(method, key):
             return None
+        self.cache_stats["misses"] += 1
         with open(os.path.join(d, "meta.json")) as f:
             meta = json.load(f)
         payload: dict[str, Any] = {}
@@ -187,12 +206,15 @@ class ArtifactStore:
         for name, paths in meta["payload_manifest"].items():
             sub = {p[len(name) + 1:]: flat[p] for p in paths}
             payload[name] = unflatten_tree(sub)
-        return Artifacts(
+        art = Artifacts(
             method=meta["method"], program=meta["program"],
             config_hash=meta["config_hash"], payload=payload,
             timings=meta["timings"], meta=meta["meta"],
             provenance=meta.get("provenance", ""),
         )
+        if self._cache is not None:
+            self._cache[(method, key)] = art
+        return art
 
     # -- plans ---------------------------------------------------------------
     def _plan_dir(self, method: str, key: str) -> str:

@@ -1,0 +1,33 @@
+"""repro.serving — sampling-as-a-service (DESIGN.md §9).
+
+Long-lived, continuous-batched plan serving over
+:class:`repro.sampling.PlanEngine`:
+
+    from repro.serving import PlanService
+
+    with PlanService(max_batch=8, max_delay_ms=5.0) as svc:
+        svc.warmup([(64, 16)])                  # compiles off the hot path
+        fut = svc.submit(PlanRequest(emb, seqs, "gcl"))
+        plan = fut.result()
+
+:class:`PlanService` admits requests as they arrive, coalesces them into
+the engine's ``(points-bucket, dim)`` groups, and dispatches a bucket when
+it fills to ``max_batch`` OR its deadline expires — never
+barrier-per-grid.  :mod:`repro.serving.loadgen` drives it with open-loop
+Poisson traffic for the SLO benchmarks
+(``benchmarks/bench_serve_latency.py``).
+
+NOT to be confused with ``repro.launch.serve``, which serves model
+*decode* traffic (prefill + KV-cache decode); this package serves
+*sampling plans*.
+"""
+
+from repro.serving.loadgen import (
+    LoadResult, poisson_arrivals, run_open_loop, synthetic_fleet,
+)
+from repro.serving.service import PlanService, parse_buckets
+
+__all__ = [
+    "LoadResult", "PlanService", "parse_buckets", "poisson_arrivals",
+    "run_open_loop", "synthetic_fleet",
+]

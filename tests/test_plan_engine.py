@@ -285,3 +285,104 @@ def test_use_pallas_threads_from_rgcn_config():
     cfg = GCLSamplerConfig(k_max=6, rgcn=RGCNConfig(use_pallas=True))
     assert GCLSampler(cfg).plan_engine().cfg.use_pallas is True
     assert GCLSampler(GCLSamplerConfig()).plan_engine().cfg.use_pallas is False
+
+
+# -- serving regressions (DESIGN.md §9) --------------------------------------
+
+def test_plan_many_empty_and_degenerate_inputs():
+    eng = PlanEngine(k_max=6, iters=10)
+    assert eng.plan_many([]) == []
+    assert eng.cluster_many([]) == []
+    # zero rows: clean trivial plan, no tracing through an empty group
+    p = eng.plan(np.zeros((0, 8), np.float32), np.zeros(0, int), "m")
+    assert p.labels.shape == (0,) and p.reps == {}
+    assert p.extra["mode"] == "trivial" and p.extra["k"] == 0
+    # zero-width features: one degenerate cluster (tiny path keeps parity
+    # with the sequential reference below the agglomeration floor)
+    labels, info = eng.cluster(np.zeros((7, 0), np.float32))
+    assert info["mode"] == "degenerate" and info["k"] == 1
+    np.testing.assert_array_equal(labels, np.zeros(7, int))
+    labels, info = eng.cluster(np.zeros((3, 0), np.float32))
+    assert info["mode"] == "tiny" and info["k"] == 1
+
+
+def test_one_dimensional_embeddings_normalize():
+    """(n,) vectors are a single scalar feature -> same result as (n, 1)."""
+    x = np.arange(8.0, dtype=np.float32)
+    eng = PlanEngine(k_max=6, iters=10)
+    labels, info = eng.cluster(x)
+    l2, i2 = select_k_and_cluster(x[:, None], k_max=6, iters=10)
+    np.testing.assert_array_equal(labels, l2)
+    assert info["k"] == i2["k"]
+
+
+def test_cluster_many_mixed_seeds_match_sequential():
+    """Per-request seed overrides inside ONE chunk: every request must get
+    ITS seed's result, identical to the sequential reference."""
+    xs = [_blobs(3, 18, 8, s) for s in range(5)]  # one 64-point bucket
+    seeds = [7, None, 3, 3, 11]                   # None -> engine seed
+    eng = PlanEngine(k_max=8, iters=15, seed=42, max_batch=8)
+    out = eng.cluster_many(xs, seeds=seeds)
+    assert eng.stats["dispatches"] == 1  # all five in one compiled dispatch
+    for x, s, (labels, info) in zip(xs, seeds, out):
+        ref_l, ref_i = select_k_and_cluster(x, seed=42 if s is None else s,
+                                            k_max=8, iters=15)
+        np.testing.assert_array_equal(labels, ref_l)
+        assert info["k"] == ref_i["k"]
+
+
+def test_plan_many_overlap_on_off_identical():
+    reqs = [PlanRequest(_blobs(3, 15, 8, s), np.arange(45), "m", seed=s)
+            for s in range(4)]
+    on = PlanEngine(k_max=6, iters=10, overlap_plan_build=True).plan_many(reqs)
+    off = PlanEngine(k_max=6, iters=10,
+                     overlap_plan_build=False).plan_many(reqs)
+    for a, b in zip(on, off):
+        np.testing.assert_array_equal(a.labels, b.labels)
+        assert a.reps == b.reps and a.extra["k"] == b.extra["k"]
+
+
+def test_errors_isolate_aligns_poison_requests():
+    good = _blobs(3, 15, 8, 0)
+    poison = np.array([[1, 2], [3, "x"]], dtype=object)  # fails float cast
+    eng = PlanEngine(k_max=6, iters=10)
+    with pytest.raises(ValueError):
+        eng.cluster_many([good, poison])
+    out = eng.cluster_many([good, poison, good], errors="isolate")
+    assert isinstance(out[1], Exception)
+    np.testing.assert_array_equal(out[0][0], out[2][0])
+    assert eng.stats["errors"] >= 1
+    plans = eng.plan_many(
+        [PlanRequest(x, np.arange(len(x)), "m")
+         for x in (good, poison)], errors="isolate")
+    assert plans[0].labels.shape == (45,)
+    assert isinstance(plans[1], Exception)
+    with pytest.raises(ValueError):
+        eng.cluster_many([good], errors="nope")
+
+
+def test_bucket_hist_structured_and_reset():
+    eng = PlanEngine(k_max=6, iters=10)
+    eng.plan_many([PlanRequest(_blobs(3, 15, 8, s), np.arange(45), "m")
+                   for s in range(2)]
+                  + [PlanRequest(_blobs(3, 30, 8, 9), np.arange(90), "m")])
+    hist = {(e["points_bucket"], e["dim"]): e["count"]
+            for e in eng.stats["bucket_hist"]}
+    assert hist == {(64, 8): 2, (128, 8): 1}
+    assert eng.stats["programs"] == 3
+    eng.reset_stats()
+    assert eng.stats["bucket_hist"] == [] and eng.stats["programs"] == 0
+    assert eng.engine_stats()["builds"] > 0  # process counters survive
+
+
+def test_warmup_prebuilds_then_zero_builds():
+    clustering._ENGINE_CACHE.clear()
+    eng = PlanEngine(k_max=6, iters=10, max_batch=4)
+    built = eng.warmup([(64, 8)], batch_sizes=[1, 2])
+    assert built > 0
+    assert eng.warmup([{"points_bucket": 64, "dim": 8}],
+                      batch_sizes=[1, 2]) == 0
+    assert eng.stats["warmed_executables"] == built
+    before = clustering.ENGINE_STATS["builds"]
+    eng.cluster_many([_blobs(3, 15, 8, s) for s in range(2)])
+    assert clustering.ENGINE_STATS["builds"] == before
