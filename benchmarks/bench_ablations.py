@@ -16,7 +16,6 @@ merging failures of PKA/Sieve.
 
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import numpy as np

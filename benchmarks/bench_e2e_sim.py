@@ -7,9 +7,7 @@ cluster weights."""
 from __future__ import annotations
 
 from benchmarks.common import metrics_for, plans_for, save_results
-from repro.sim.simulate import (
-    full_metrics, reconstruct, sampling_error, sim_wall_time,
-)
+from repro.sim.simulate import sampling_error, sim_wall_time
 
 PROGRAMS = ("nw", "lu", "cfd", "phi-2", "pythia")
 

@@ -35,6 +35,7 @@ import time
 import numpy as np
 
 from benchmarks.common import save_results
+from repro.analysis.sanitize import recompile_guard
 from repro.core import clustering
 from repro.core.clustering import select_k_and_cluster
 from repro.sampling.base import plan_from_labels
@@ -87,9 +88,11 @@ def run(n_requests: int = 240, d: int = 16, k_max: int = 8, iters: int = 10,
         t0 = time.perf_counter()
         warmed = svc.warmup(buckets)
         warmup_s = time.perf_counter() - t0
-        builds0 = clustering.ENGINE_STATS["builds"]
-        warm = run_open_loop(svc, subset, cold_rate, seed=1)
-        warm_builds_during_serving = clustering.ENGINE_STATS["builds"] - builds0
+        # the warm serving path must build ZERO new executables — asserted
+        # by the sanitizer guard, not an ad-hoc counter diff
+        with recompile_guard(label="warm serving path") as guard:
+            warm = run_open_loop(svc, subset, cold_rate, seed=1)
+        warm_builds_during_serving = guard.builds
     cold_vs_warm = {
         "offered_per_s": cold_rate, "n_requests": len(subset),
         "warmed_executables": warmed, "warmup_s": warmup_s,

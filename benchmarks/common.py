@@ -15,7 +15,7 @@ from repro.core.sampler import GCLSamplerConfig
 from repro.core.train import GCLTrainConfig
 from repro.sampling import available_methods, evaluate_metrics, get_method
 from repro.sim.simulate import simulate_program
-from repro.tracing.programs import PAPER_PROGRAMS, get_program
+from repro.tracing.programs import get_program
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 os.makedirs(RESULTS_DIR, exist_ok=True)

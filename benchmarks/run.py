@@ -10,7 +10,6 @@ and writes detailed JSON under benchmarks/results/.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

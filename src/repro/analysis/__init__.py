@@ -1,0 +1,40 @@
+"""repro.analysis — invariant linter + runtime sanitizers (DESIGN.md §10).
+
+The compiled engines (train scan epochs, the multi-K plan sweep, warm
+serving) advertise invariants that plain pytest cannot see: zero recompiles
+on warm paths, no host syncs inside traced regions or dispatch hot loops,
+fold-in RNG discipline, donation safety, and Pallas/precision conformance.
+This package machine-checks them two ways:
+
+- **statically** — ``python -m repro.analysis.lint`` runs an AST pass over
+  ``src/repro`` with repo-specific rules R1–R5 (:mod:`repro.analysis.rules`),
+  a call-graph that knows which functions are jit/scan/vmap-traced
+  (:mod:`repro.analysis.callgraph`), inline waivers
+  (``# lint: allow[R1] reason``) and a checked-in baseline
+  (``baseline.json``) so accepted findings never fail CI while any NEW
+  finding does;
+- **at runtime** — :mod:`repro.analysis.sanitize` provides a
+  :func:`~repro.analysis.sanitize.recompile_guard` context manager
+  (asserts a build budget against the engine compile counters) and a
+  NaN/inf :func:`~repro.analysis.sanitize.check_finite` /
+  :func:`~repro.analysis.sanitize.nan_tripwire` wrappable around
+  ``fit`` / ``plan_many`` (and optionally ``PlanService``).
+"""
+
+from __future__ import annotations
+
+from repro.analysis.rules import Finding, RULES
+from repro.analysis.sanitize import (
+    NonFiniteError, RecompileError, check_finite, nan_tripwire,
+    recompile_guard,
+)
+
+__all__ = [
+    "Finding",
+    "RULES",
+    "NonFiniteError",
+    "RecompileError",
+    "check_finite",
+    "nan_tripwire",
+    "recompile_guard",
+]

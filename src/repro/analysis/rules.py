@@ -1,0 +1,673 @@
+"""Repo-specific invariant rules R1–R5 (DESIGN.md §10).
+
+R1  host-sync hazard      float()/int()/.item()/np.asarray()/device_get/
+                          block_until_ready inside a jit/scan/vmap-traced
+                          region, or applied to compiled-engine outputs
+                          inside a dispatch hot loop
+R2  recompile hazard      jax.jit built outside the process-wide caches
+                          (per-call jits, jit-in-loop, unhashable statics)
+R3  RNG discipline        hard-coded PRNGKey literals in library code;
+                          key reuse across samplers without split/fold_in
+R4  donation safety       a buffer read after being passed through a
+                          donate_argnums position
+R5  Pallas conformance    hard-coded interpret= outside repro.kernels,
+                          true-division grids, bf16 casts that bypass
+                          core/precision.py, kernel matmuls without an
+                          explicit f32 accumulator
+
+Waiver syntax: a ``# lint: allow[R1] reason`` comment on the finding line,
+the line above it, or the enclosing ``def`` line (function-wide) suppresses
+the named rule(s).  Waivers are for *genuine* host paths (the
+``engine="python"`` parity shim, the sequential per-K reference, one-shot
+CLI jits) — fix true positives instead of waiving them.
+"""
+
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.analysis.callgraph import FunctionInfo, ModuleIndex, dotted
+
+RULES = {
+    "R1": "host-sync hazard",
+    "R2": "recompile hazard",
+    "R3": "RNG discipline",
+    "R4": "donation safety",
+    "R5": "Pallas conformance",
+}
+
+#: numpy functions that force a device->host materialization when handed a
+#: traced/device array (trace-time shape math like np.sqrt(3) stays legal)
+_NP_SYNC = {"asarray", "array", "ascontiguousarray", "copy", "save",
+            "savez", "savez_compressed", "frombuffer"}
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_JAX_SYNC = {"jax.device_get", "jax.block_until_ready"}
+_SAMPLERS = {
+    "uniform", "normal", "bernoulli", "randint", "categorical", "choice",
+    "permutation", "shuffle", "gumbel", "truncated_normal", "exponential",
+    "laplace", "bits", "beta", "dirichlet", "gamma", "poisson",
+}
+_KEY_MAKERS = {"jax.random.PRNGKey", "jax.random.split",
+               "jax.random.fold_in", "jax.random.key"}
+
+_WAIVE_RE = re.compile(r"lint:\s*allow\[([A-Za-z0-9_,\s]+)\]")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str      # repo-relative, forward slashes
+    line: int
+    col: int
+    symbol: str    # enclosing function qualname or "<module>"
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Baseline identity — line-insensitive so unrelated edits that
+        shift code never churn the baseline."""
+        return f"{self.rule} :: {self.path} :: {self.symbol} :: {self.message}"
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{self.symbol}] {self.message}")
+
+
+def parse_waivers(source: str) -> dict[int, set]:
+    """line -> set of waived rule ids, from ``# lint: allow[...]`` comments."""
+    out: dict[int, set] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _WAIVE_RE.search(tok.string)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                out.setdefault(tok.start[0], set()).update(rules)
+    except tokenize.TokenError:
+        pass
+    return out
+
+
+def _snippet(node: ast.AST, limit: int = 48) -> str:
+    try:
+        text = ast.unparse(node)
+    except Exception:
+        text = "<expr>"
+    text = " ".join(text.split())
+    return text if len(text) <= limit else text[: limit - 3] + "..."
+
+
+def iter_own(node: ast.AST):
+    """Walk a function body WITHOUT descending into nested functions or
+    lambdas (those are indexed — and judged — separately)."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        child = stack.pop()
+        yield child
+        if not isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(child))
+
+
+def _names_in(node: ast.AST) -> set:
+    return {n.id for n in ast.walk(node)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+
+
+def _assigned_names(target: ast.AST) -> set:
+    out = set()
+    for n in ast.walk(target):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+            out.add(n.id)
+    return out
+
+
+class RuleContext:
+    """Everything one module's rule passes need: the index, the global
+    function map (after fixed points), and resolution helpers."""
+
+    def __init__(self, idx: ModuleIndex, funcs: dict[str, FunctionInfo],
+                 jit_attrs: dict[str, tuple]):
+        self.idx = idx
+        self.funcs = funcs
+        self.jit_attrs = jit_attrs   # repo-wide attr name -> donate positions
+        self.in_kernels = "/kernels/" in idx.path.replace("\\", "/")
+        #: node -> owning FunctionInfo (module-level nodes are absent)
+        self.owner: dict[int, FunctionInfo] = {}
+        for info in idx.functions.values():
+            for child in iter_own(info.node):
+                self.owner.setdefault(id(child), info)
+
+    def symbol(self, node: ast.AST) -> str:
+        info = self.owner.get(id(node))
+        return info.qual if info is not None else "<module>"
+
+    def owner_info(self, node: ast.AST) -> Optional[FunctionInfo]:
+        return self.owner.get(id(node))
+
+    def call_name(self, node: ast.Call) -> Optional[str]:
+        return self.idx.call_names.get(node)
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        return Finding(rule=rule, path=self.idx.path, line=node.lineno,
+                       col=node.col_offset, symbol=self.symbol(node),
+                       message=message)
+
+    # -- dispatch-source classification -------------------------------------
+    def lookup(self, name: Optional[str]) -> Optional[FunctionInfo]:
+        """Map a resolved callee (fid or cross-module dotted path) to a
+        scanned function."""
+        if name is None:
+            return None
+        return self.funcs.get(name)
+
+    def local_executables(self, fn: FunctionInfo) -> dict:
+        """Names in ``fn`` bound to compiled executables -> donate
+        positions: direct ``x = jax.jit(...)`` plus factory results like
+        ``step_fn = self._make_step()`` where the factory returns a jit."""
+        out: dict[str, tuple] = dict(self.idx.jit_locals.get(fn.fid, {}))
+        for node in iter_own(fn.node):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call):
+                target = self.lookup(self.call_name(node.value))
+                if target is not None and target.returns_jit:
+                    for tgt in node.targets:
+                        for n in _assigned_names(tgt):
+                            out[n] = target.donate_positions
+        return out
+
+    def is_dispatch_call(self, node: ast.Call, fn: FunctionInfo,
+                         local_exec: dict) -> bool:
+        """Does this call launch compiled device work?"""
+        name = self.call_name(node)
+        target = self.lookup(name)
+        if target is not None:
+            return (target.traced_entry or target.returns_jit
+                    or target.dispatching)
+        if name is not None:
+            return False  # resolved external (jax.lax.scan, np.*) — not ours
+        func = node.func
+        if isinstance(func, ast.Name):
+            return func.id in local_exec
+        if isinstance(func, ast.Attribute):
+            # unresolvable attr (eng.scan on a local object): fall back to
+            # the repo-wide jit-attr tail match
+            return func.attr in self.jit_attrs
+        return False
+
+    def donate_positions_of(self, node: ast.Call, fn: FunctionInfo,
+                            local_exec: dict) -> tuple:
+        name = self.call_name(node)
+        if name is not None:
+            # resolved names never donate at the call site: externals
+            # (jax.lax.scan) don't, and calling a returns-jit *factory*
+            # doesn't either — donation applies when the bound result runs
+            return ()
+        func = node.func
+        if isinstance(func, ast.Name):
+            return local_exec.get(func.id, ())
+        if isinstance(func, ast.Attribute):
+            return self.jit_attrs.get(func.attr, ())
+        return ()
+
+
+def _is_builtin_cast(ctx: RuleContext, node: ast.Call) -> Optional[str]:
+    """float()/int()/bool() on a non-constant argument (a device scalar at
+    runtime forces a sync)."""
+    func = node.func
+    if (isinstance(func, ast.Name) and func.id in ("float", "int", "bool")
+            and ctx.call_name(node) is None and len(node.args) == 1
+            and not isinstance(node.args[0], ast.Constant)):
+        return func.id
+    return None
+
+
+def _sync_kind(ctx: RuleContext, node: ast.Call) -> Optional[str]:
+    """Classify a call as a host-sync primitive (None if not one)."""
+    cast = _is_builtin_cast(ctx, node)
+    if cast is not None:
+        return f"{cast}()"
+    name = ctx.call_name(node)
+    if name in _JAX_SYNC:
+        return name
+    if name is not None and name.startswith("numpy."):
+        tail = name.split(".")[-1]
+        if tail in _NP_SYNC:
+            return f"np.{tail}"
+    func = node.func
+    if isinstance(func, ast.Attribute) and func.attr in _SYNC_METHODS:
+        return f".{func.attr}()"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# R1 — host-sync hazard
+# ---------------------------------------------------------------------------
+
+
+def check_r1(ctx: RuleContext) -> list[Finding]:
+    out: list[Finding] = []
+    # R1a: sync primitives inside traced regions
+    for info in ctx.idx.functions.values():
+        if not info.traced:
+            continue
+        for node in iter_own(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            kind = _sync_kind(ctx, node)
+            if kind is not None:
+                out.append(ctx.finding(
+                    "R1", node,
+                    f"host sync `{_snippet(node)}` inside jit/scan/vmap-"
+                    f"traced `{info.qual}` ({kind} forces a device round "
+                    f"trip per trace)"))
+    # R1b: sync on compiled-engine outputs inside a dispatch hot loop
+    for info in ctx.idx.functions.values():
+        if info.traced:
+            continue
+        for loop in iter_own(info.node):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            out.extend(_check_dispatch_loop(ctx, info, loop))
+    return out
+
+
+def _check_dispatch_loop(ctx: RuleContext, info: FunctionInfo,
+                         loop: ast.AST) -> list[Finding]:
+    body_nodes = [n for stmt in loop.body for n in [stmt, *iter_own(stmt)]]
+    local_exec = ctx.local_executables(info)
+    tainted: set = set()
+    dispatch_names: set = set()
+    for node in body_nodes:
+        if isinstance(node, ast.Assign):
+            calls = [c for c in ast.walk(node.value)
+                     if isinstance(c, ast.Call)
+                     and ctx.is_dispatch_call(c, info, local_exec)]
+            if calls:
+                for tgt in node.targets:
+                    tainted |= _assigned_names(tgt)
+                dispatch_names |= {_snippet(c.func, 32) for c in calls}
+    if not tainted:
+        return []
+    # comprehension variables iterating over tainted values inherit taint
+    for node in body_nodes:
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+            for gen in node.generators:
+                if _names_in(gen.iter) & tainted:
+                    tainted |= _assigned_names(gen.target)
+    out = []
+    for node in body_nodes:
+        if not isinstance(node, ast.Call):
+            continue
+        kind = _sync_kind_loop(ctx, node)
+        if kind is None:
+            continue
+        refs = set()
+        for arg in [*node.args, *[k.value for k in node.keywords]]:
+            refs |= _names_in(arg)
+        if isinstance(node.func, ast.Attribute):
+            refs |= _names_in(node.func.value)
+        if refs & tainted:
+            out.append(ctx.finding(
+                "R1", node,
+                f"host sync `{_snippet(node)}` on compiled-engine output "
+                f"(from {'/'.join(sorted(dispatch_names))}) inside the "
+                f"dispatch loop of `{info.qual}` — one device round trip "
+                f"per iteration"))
+    return out
+
+
+def _sync_kind_loop(ctx: RuleContext, node: ast.Call) -> Optional[str]:
+    """In a dispatch loop ANY numpy call on an engine output syncs, not
+    just the conversion set."""
+    kind = _sync_kind(ctx, node)
+    if kind is not None:
+        return kind
+    name = ctx.call_name(node)
+    if name is not None and name.startswith("numpy."):
+        return f"np.{name.split('.')[-1]}"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# R2 — recompile hazard
+# ---------------------------------------------------------------------------
+
+
+def check_r2(ctx: RuleContext) -> list[Finding]:
+    out: list[Finding] = []
+    for node, name in ctx.idx.call_names.items():
+        if name != "jax.jit":
+            continue
+        info = ctx.owner_info(node)
+        if info is None:
+            continue  # module-level jit compiles once per process
+        if info.lru_cached:
+            continue
+        if _jit_result_cached(ctx, info, node):
+            continue
+        in_loop = _enclosing_loop(info, node)
+        if in_loop:
+            out.append(ctx.finding(
+                "R2", node,
+                f"jax.jit built inside a loop in `{info.qual}` — every "
+                f"iteration traces a fresh executable; hoist it or route "
+                f"through a process-wide cache"))
+        else:
+            out.append(ctx.finding(
+                "R2", node,
+                f"jax.jit built per call in `{info.qual}` without a "
+                f"process-wide cache (lru_cache / cache-dict store) — "
+                f"repeated calls recompile"))
+    out.extend(_check_static_args(ctx))
+    return out
+
+
+def _jit_result_cached(ctx: RuleContext, info: FunctionInfo,
+                       jit_call: ast.Call) -> bool:
+    """The jit result escapes into a cache: assigned to a subscript
+    (``cache[key] = jax.jit(...)``), to an attribute (``self._fn = ...``,
+    bounded per instance), stored under a name that is later written into a
+    subscript, or passed as a keyword into a registry-style constructor."""
+    names: set = set()
+    for node in iter_own(info.node):
+        if isinstance(node, ast.Assign) and _contains(node.value, jit_call):
+            for tgt in node.targets:
+                if isinstance(tgt, (ast.Subscript, ast.Attribute)):
+                    return True
+                names |= _assigned_names(tgt)
+        if isinstance(node, ast.keyword) and _contains(node.value, jit_call):
+            return True  # EngineFns(scan=jax.jit(...)) — cached via lru
+    if not names:
+        return False
+    for node in iter_own(info.node):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if (isinstance(tgt, ast.Subscript)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id in names):
+                    return True
+    return False
+
+
+def _contains(tree: ast.AST, target: ast.AST) -> bool:
+    return any(n is target for n in ast.walk(tree))
+
+
+def _enclosing_loop(info: FunctionInfo, target: ast.AST) -> bool:
+    for node in iter_own(info.node):
+        if isinstance(node, (ast.For, ast.While)):
+            if any(n is target for n in ast.walk(node)):
+                return True
+    return False
+
+
+def _check_static_args(ctx: RuleContext) -> list[Finding]:
+    """Unhashable literals at static positions of jitted callables."""
+    out: list[Finding] = []
+    static_fns: dict[str, set] = {}   # local fn qual -> static arg names
+    for info in ctx.idx.functions.values():
+        node = info.node
+        if isinstance(node, ast.Lambda):
+            continue
+        for dec in node.decorator_list:
+            if not isinstance(dec, ast.Call):
+                continue
+            base = ctx.idx.resolve(dec.func)
+            is_jit = base == "jax.jit" or (
+                base == "functools.partial" and dec.args
+                and ctx.idx.resolve(dec.args[0]) == "jax.jit")
+            if not is_jit:
+                continue
+            for kw in dec.keywords:
+                if kw.arg == "static_argnames":
+                    vals = (kw.value.elts if isinstance(
+                        kw.value, (ast.Tuple, ast.List)) else [kw.value])
+                    static_fns[info.fid] = {
+                        v.value for v in vals
+                        if isinstance(v, ast.Constant)}
+    if not static_fns:
+        return out
+    for node, name in ctx.idx.call_names.items():
+        target = static_fns.get(name or "")
+        if not target:
+            continue
+        for kw in node.keywords:
+            if kw.arg in target and isinstance(
+                    kw.value, (ast.List, ast.Dict, ast.Set)):
+                out.append(ctx.finding(
+                    "R2", node,
+                    f"unhashable {type(kw.value).__name__.lower()} literal "
+                    f"passed as static arg `{kw.arg}` — every call "
+                    f"re-traces (and newer jax versions reject it)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R3 — RNG discipline
+# ---------------------------------------------------------------------------
+
+
+def check_r3(ctx: RuleContext) -> list[Finding]:
+    out: list[Finding] = []
+    for node, name in ctx.idx.call_names.items():
+        if name in ("jax.random.PRNGKey", "jax.random.key") and node.args \
+                and isinstance(node.args[0], ast.Constant):
+            out.append(ctx.finding(
+                "R3", node,
+                f"hard-coded `{_snippet(node)}` in library code — derive "
+                f"the key from the config seed via fold_in so callers "
+                f"control determinism"))
+    for info in ctx.idx.functions.values():
+        out.extend(_check_key_reuse(ctx, info))
+    return out
+
+
+def _check_key_reuse(ctx: RuleContext, info: FunctionInfo) -> list[Finding]:
+    key_vars: set = set()
+    reassigned: set = set()
+    for node in iter_own(info.node):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if ctx.call_name(node.value) in _KEY_MAKERS:
+                for tgt in node.targets:
+                    new = _assigned_names(tgt)
+                    reassigned |= new & key_vars
+                    key_vars |= new
+    uses: dict[str, list] = {}
+    for node in iter_own(info.node):
+        if not isinstance(node, ast.Call):
+            continue
+        name = ctx.call_name(node)
+        if (name is None or not name.startswith("jax.random.")
+                or name.split(".")[-1] not in _SAMPLERS):
+            continue
+        if node.args and isinstance(node.args[0], ast.Name) \
+                and node.args[0].id in key_vars:
+            uses.setdefault(node.args[0].id, []).append(node)
+    out = []
+    for var, nodes in uses.items():
+        if len(nodes) < 2 or var in reassigned:
+            continue
+        for node in sorted(nodes, key=lambda n: n.lineno)[1:]:
+            out.append(ctx.finding(
+                "R3", node,
+                f"PRNGKey `{var}` reused by `{_snippet(node)}` after an "
+                f"earlier sampler draw in `{info.qual}` — split or fold_in "
+                f"between draws (reuse correlates the streams)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R4 — donation safety
+# ---------------------------------------------------------------------------
+
+
+def check_r4(ctx: RuleContext) -> list[Finding]:
+    out: list[Finding] = []
+    for info in ctx.idx.functions.values():
+        out.extend(_check_donation(ctx, info))
+    return out
+
+
+def _check_donation(ctx: RuleContext, info: FunctionInfo) -> list[Finding]:
+    body = info.node.body
+    if not isinstance(body, list):
+        return []
+    # local names bound to donating executables (x = self._make_step() where
+    # _make_step returns jax.jit(..., donate_argnums=...))
+    local_jit = ctx.local_executables(info)
+    dead: dict[str, tuple] = {}   # name -> (line, callee snippet)
+    out: list[Finding] = []
+    statements = sorted(
+        (n for n in iter_own(info.node) if isinstance(n, ast.stmt)),
+        key=lambda n: (n.lineno, n.col_offset))
+    for stmt in statements:
+        # reads of dead names in this statement (before any rebinds apply)
+        reads = _names_in(stmt)
+        writes = _assigned_names(stmt) if isinstance(
+            stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign, ast.For)) else set()
+        for name in list(dead):
+            line, callee = dead[name]
+            if stmt.lineno <= line:
+                continue
+            if name in reads and name not in writes:
+                out.append(ctx.finding(
+                    "R4", stmt,
+                    f"`{name}` read after being donated to `{callee}` "
+                    f"(donate_argnums) in `{info.qual}` — the buffer is "
+                    f"invalid once the executable runs"))
+                dead.pop(name)
+            elif name in writes:
+                dead.pop(name)
+        for call in ast.walk(stmt):
+            if not isinstance(call, ast.Call):
+                continue
+            donate = ctx.donate_positions_of(call, info, local_jit)
+            if not donate:
+                continue
+            rebound = _assigned_names(stmt)
+            for pos in donate:
+                if pos < len(call.args) and isinstance(
+                        call.args[pos], ast.Name):
+                    name = call.args[pos].id
+                    if name not in rebound:
+                        dead[name] = (stmt.lineno, _snippet(call.func, 32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R5 — Pallas conformance
+# ---------------------------------------------------------------------------
+
+
+def check_r5(ctx: RuleContext) -> list[Finding]:
+    out: list[Finding] = []
+    path = ctx.idx.path.replace("\\", "/")
+    in_precision = path.endswith("core/precision.py")
+    is_kernel_impl = ctx.in_kernels and path.endswith("kernel.py")
+    for node, name in ctx.idx.call_names.items():
+        # R5a: hard-coded interpret outside repro.kernels
+        if not ctx.in_kernels:
+            for kw in node.keywords:
+                if kw.arg == "interpret" and isinstance(
+                        kw.value, ast.Constant) and isinstance(
+                            kw.value.value, bool):
+                    out.append(ctx.finding(
+                        "R5", node,
+                        f"hard-coded interpret={kw.value.value} at "
+                        f"`{_snippet(node)}` — pass interpret=None so "
+                        f"repro.kernels.default_interpret resolves the "
+                        f"backend"))
+        # R5b: true-division grid in pallas_call
+        if name == "jax.experimental.pallas.pallas_call":
+            for kw in node.keywords:
+                if kw.arg == "grid" and any(
+                        isinstance(n, ast.BinOp)
+                        and isinstance(n.op, ast.Div)
+                        for n in ast.walk(kw.value)):
+                    out.append(ctx.finding(
+                        "R5", node,
+                        "pallas_call grid uses true division `/` — a "
+                        "non-divisible shape silently yields a float "
+                        "grid; use `//` (with a divisibility guard) or "
+                        "pl.cdiv"))
+        # R5c: bf16 casts outside the precision policy
+        if not in_precision:
+            bf16 = _bf16_cast(ctx, node)
+            if bf16 is not None:
+                out.append(ctx.finding(
+                    "R5", node,
+                    f"direct bfloat16 cast `{_snippet(node)}` bypasses "
+                    f"the precision policy — use "
+                    f"core.precision.Policy.cast_compute so LN/readout/"
+                    f"loss stay f32"))
+        # R5d: kernel matmuls must pin an f32 accumulator
+        if is_kernel_impl and name in (
+                "jax.lax.dot_general", "jax.numpy.dot", "jax.numpy.einsum",
+                "jax.numpy.matmul"):
+            if not any(kw.arg == "preferred_element_type"
+                       for kw in node.keywords):
+                out.append(ctx.finding(
+                    "R5", node,
+                    f"kernel matmul `{_snippet(node)}` without "
+                    f"preferred_element_type — bf16 inputs would "
+                    f"accumulate in bf16 on the MXU"))
+    return out
+
+
+def _bf16_cast(ctx: RuleContext, node: ast.Call) -> Optional[str]:
+    func = node.func
+    if isinstance(func, ast.Attribute) and func.attr == "astype" \
+            and node.args:
+        arg = node.args[0]
+        if isinstance(arg, ast.Constant) and arg.value == "bfloat16":
+            return "bfloat16"
+        parts = dotted(arg)
+        if parts and parts[-1] == "bfloat16":
+            return "bfloat16"
+    for kw in node.keywords:
+        if kw.arg == "dtype":
+            if isinstance(kw.value, ast.Constant) \
+                    and kw.value.value == "bfloat16":
+                return "bfloat16"
+            parts = dotted(kw.value)
+            if parts and parts[-1] == "bfloat16":
+                return "bfloat16"
+    return None
+
+
+ALL_CHECKS = (check_r1, check_r2, check_r3, check_r4, check_r5)
+
+
+def run_rules(ctx: RuleContext) -> list[Finding]:
+    findings: list[Finding] = []
+    for check in ALL_CHECKS:
+        findings.extend(check(ctx))
+    return findings
+
+
+def apply_waivers(findings: list[Finding], waivers: dict[int, set],
+                  ctx: RuleContext) -> list[Finding]:
+    """Drop findings waived on their line, the line above, or the
+    enclosing def line."""
+    def_lines: dict[str, int] = {
+        info.qual: info.node.lineno for info in ctx.idx.functions.values()}
+    kept = []
+    for f in findings:
+        lines = [f.line, f.line - 1]
+        if f.symbol in def_lines:
+            # on the def line or its own line just above -> function-wide
+            lines.extend((def_lines[f.symbol], def_lines[f.symbol] - 1))
+        waived = any(f.rule in waivers.get(ln, ()) or
+                     "ALL" in waivers.get(ln, ()) for ln in lines)
+        if not waived:
+            kept.append(f)
+    return kept

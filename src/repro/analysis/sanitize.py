@@ -1,0 +1,155 @@
+"""Runtime sanitizers for the compiled engines (DESIGN.md §10).
+
+Two checks that the static linter cannot prove but the process can assert:
+
+- :func:`recompile_guard` — a context manager that snapshots the engine
+  compile counters (``repro.core.clustering.ENGINE_STATS["builds"]`` and
+  the train engine's ``_engine_fns`` lru_cache misses) and raises
+  :class:`RecompileError` if the guarded region built more executables
+  than its budget (0 on warm serving/training paths).
+
+- :func:`check_finite` / :func:`nan_tripwire` — a NaN/inf tripwire that
+  walks arbitrary result trees (dicts, dataclasses like ``Plan`` /
+  ``Artifacts``, numpy or jax arrays) and raises :class:`NonFiniteError`
+  naming the offending path.  ``nan_tripwire(fn)`` wraps ``fit`` /
+  ``plan_many`` style callables; ``PlanService(..., sanitize=True)`` wires
+  it into the dispatcher.
+
+Both are cheap enough for tests and smoke CI; the tripwire syncs results
+to host, so keep it off hot production paths.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Any, Callable, Iterator, Optional
+
+import numpy as np
+
+
+class RecompileError(RuntimeError):
+    """A guarded region built more executables than its budget."""
+
+
+class NonFiniteError(ValueError):
+    """A guarded result contained NaN or inf."""
+
+
+def _train_misses() -> int:
+    """Current build count of the train engine's executable cache."""
+    from repro.core import train as train_mod
+
+    return train_mod._engine_fns.cache_info().misses
+
+
+@dataclasses.dataclass
+class GuardStats:
+    """Filled in when the :func:`recompile_guard` block exits."""
+
+    cluster_builds: int = 0
+    train_builds: int = 0
+
+    @property
+    def builds(self) -> int:
+        return self.cluster_builds + self.train_builds
+
+
+@contextlib.contextmanager
+def recompile_guard(max_builds: int = 0, *, include_train: bool = True,
+                    label: str = "warm path") -> Iterator[GuardStats]:
+    """Assert the region compiles at most ``max_builds`` new executables.
+
+    Counts builds of the clustering/plan sweep engine (``ENGINE_STATS``)
+    plus, when ``include_train``, the train engine cache.  Use around warm
+    serving or resumed-training regions where every executable should
+    already exist::
+
+        service.warmup(specs)
+        with recompile_guard():          # 0 new builds allowed
+            service.plan(xs)
+    """
+    from repro.core import clustering
+
+    cluster_start = clustering.ENGINE_STATS["builds"]
+    train_start = _train_misses() if include_train else 0
+    stats = GuardStats()
+    try:
+        yield stats
+    finally:
+        stats.cluster_builds = (
+            clustering.ENGINE_STATS["builds"] - cluster_start)
+        stats.train_builds = (
+            (_train_misses() - train_start) if include_train else 0)
+    if stats.builds > max_builds:
+        raise RecompileError(
+            f"recompile guard tripped on {label}: {stats.builds} new "
+            f"executable build(s) (cluster={stats.cluster_builds}, "
+            f"train={stats.train_builds}) exceed the budget of "
+            f"{max_builds} — warm the pool first (PlanEngine.warmup / "
+            f"clustering.warm_sweep) or raise max_builds")
+
+
+def _is_float_array(x: Any) -> bool:
+    dtype = getattr(x, "dtype", None)
+    if dtype is None:
+        return isinstance(x, float)
+    try:
+        return np.issubdtype(np.dtype(dtype), np.inexact)
+    except TypeError:
+        return False
+
+
+def _walk(obj: Any, path: str, seen: set) -> Iterator[tuple]:
+    if id(obj) in seen:
+        return
+    if isinstance(obj, dict):
+        seen.add(id(obj))
+        for k, v in obj.items():
+            yield from _walk(v, f"{path}[{k!r}]", seen)
+    elif isinstance(obj, (list, tuple)):
+        seen.add(id(obj))
+        for i, v in enumerate(obj):
+            yield from _walk(v, f"{path}[{i}]", seen)
+    elif dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        seen.add(id(obj))
+        for f in dataclasses.fields(obj):
+            yield from _walk(getattr(obj, f.name), f"{path}.{f.name}", seen)
+    elif _is_float_array(obj) or isinstance(obj, float):
+        yield path, obj
+
+
+def check_finite(obj: Any, name: str = "result") -> None:
+    """Raise :class:`NonFiniteError` if any float leaf of ``obj`` holds
+    NaN/inf.  Walks dicts, sequences, dataclasses, numpy and jax arrays
+    (device arrays are synced to host — sanitizer cost, not hot-path)."""
+    for path, leaf in _walk(obj, name, set()):
+        arr = np.asarray(leaf)
+        if arr.size and not np.isfinite(arr).all():
+            bad = int(arr.size - np.isfinite(arr).sum())
+            raise NonFiniteError(
+                f"non-finite values in {path}: {bad}/{arr.size} element(s) "
+                f"are NaN/inf (dtype={arr.dtype}, shape={arr.shape})")
+
+
+def nan_tripwire(fn: Optional[Callable] = None, *,
+                 name: Optional[str] = None) -> Callable:
+    """Wrap a callable so its return value is checked by
+    :func:`check_finite`.  Usable bare or as a decorator::
+
+        plan = nan_tripwire(engine.plan_many)
+        @nan_tripwire
+        def fit(...): ...
+    """
+    if fn is None:
+        return functools.partial(nan_tripwire, name=name)
+    label = name or getattr(fn, "__qualname__", repr(fn))
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        out = fn(*args, **kwargs)
+        check_finite(out, name=f"{label}(...)")
+        return out
+
+    return wrapped

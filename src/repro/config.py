@@ -7,7 +7,7 @@ Every assigned architecture is a `ModelConfig` registered under its public id
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 # ---------------------------------------------------------------------------

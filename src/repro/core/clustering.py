@@ -208,6 +208,7 @@ def select_k_and_cluster(
         lab, cent, _ = kmeans(x, k, seed=seed, iters=iters,
                               use_pallas=use_pallas, init_idx=dev_init)
         # re-label compactly (empty clusters possible)
+        # lint: allow[R1] sequential reference syncs per candidate K by design
         _, lab = np.unique(lab, return_inverse=True)
         if lab.max() == 0:
             continue
@@ -351,6 +352,7 @@ def _sweep_core(x, pmask, init_idx, sil_mask, *, k_max: int, iters: int,
     n_real = jnp.sum(pmask)
     # same candidate set as the sequential `range(2, min(k_max, n-1) + 1)`
     k_valid = ks.astype(x.dtype) <= jnp.minimum(
+        # lint: allow[R1] k_max is a static arg — trace-time constant
         jnp.asarray(float(k_max), x.dtype), n_real - 1.0)
 
     cent0 = x[init_idx]                               # (k_max, d) shared

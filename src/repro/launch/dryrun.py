@@ -25,7 +25,7 @@ import traceback
 import jax
 
 from repro.config import (
-    KIND_DECODE, KIND_PREFILL, KIND_TRAIN, SHAPES, TrainConfig,
+    KIND_PREFILL, KIND_TRAIN, SHAPES, TrainConfig,
     param_counts, model_flops, shape_applicable,
 )
 from repro.configs import get_arch, list_archs

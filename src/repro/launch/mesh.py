@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import jax
 
-from repro.config import MeshConfig
 from repro.distributed.sharding import MeshRules
 
 

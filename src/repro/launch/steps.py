@@ -3,16 +3,11 @@ decode, plus the sharding trees that accompany them."""
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from repro.config import (
-    KIND_DECODE, KIND_PREFILL, KIND_TRAIN, ModelConfig, ShapeConfig,
-    TrainConfig,
-)
-from repro.distributed.sharding import MeshRules, sharding_for, spec_for
+from repro.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed.sharding import MeshRules, sharding_for
 from repro.models import transformer as tf
 from repro.models.specs import batch_axes_tree, batch_specs, decode_state_specs
 from repro.optim import TrainState, adamw_init, apply_gradients
@@ -108,8 +103,10 @@ def _tree_shardings(axes_tree, spec_tree, rules: MeshRules, is_param: bool):
 
 
 def abstract_params(cfg: ModelConfig):
-    specs = jax.eval_shape(lambda k: tf.init_params(cfg, k)[0],
-                           jax.random.PRNGKey(0))
+    specs = jax.eval_shape(
+        lambda k: tf.init_params(cfg, k)[0],
+        jax.random.PRNGKey(0))  # lint: allow[R3] abstract eval_shape key
+
     return specs
 
 

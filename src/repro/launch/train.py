@@ -15,9 +15,8 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
-from repro.config import SHAPES, ShapeConfig, TrainConfig
+from repro.config import ShapeConfig, TrainConfig
 from repro.configs import get_arch, smoke_arch
 from repro.checkpoint import CheckpointManager
 from repro.data import TokenStream

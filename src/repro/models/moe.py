@@ -41,6 +41,7 @@ def init_moe(key, cfg: ModelConfig):
     return params, moe_axes(cfg)
 
 
+# lint: allow[R1] config shape math — trace-time constants, not device syncs
 def capacity(cfg: ModelConfig, group_tokens: int) -> int:
     c = int(np.ceil(cfg.top_k * group_tokens * cfg.capacity_factor / cfg.num_experts))
     c = max(c, cfg.top_k)

@@ -10,7 +10,7 @@ from repro.config import (
     KIND_DECODE, KIND_PREFILL, KIND_TRAIN, ModelConfig, ShapeConfig,
 )
 from repro.models.frontends import text_len
-from repro.models.transformer import decode_state_axes, init_decode_state
+from repro.models.transformer import init_decode_state
 
 
 def _sd(shape, dtype):

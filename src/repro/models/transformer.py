@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import (
-    FFN_DENSE, FFN_MOE, FFN_NONE, MIXER_ATTN, MIXER_MAMBA2, ModelConfig,
+    FFN_MOE, FFN_NONE, MIXER_ATTN, ModelConfig,
 )
 from repro.distributed.sharding import constrain
 from repro.models import attention as attn_mod

@@ -79,6 +79,7 @@ class PlanService:
     def __init__(self, engine: Optional[PlanEngine] = None, *,
                  max_batch: Optional[int] = None,
                  max_delay_ms: float = 5.0,
+                 sanitize: bool = False,
                  **engine_overrides):
         if engine is None:
             kw = dict(max_batch=max_batch or 8, record_timings=True)
@@ -87,6 +88,10 @@ class PlanService:
         elif engine_overrides:
             raise ValueError("pass engine_overrides only without engine")
         self.engine = engine
+        #: when on, every served plan passes the NaN/inf tripwire
+        #: (repro.analysis.sanitize.check_finite); a non-finite plan fails
+        #: only its own future, like any isolated engine error
+        self.sanitize = bool(sanitize)
         self.max_batch = int(max_batch or engine.cfg.max_batch)
         self.max_delay_s = float(max_delay_ms) / 1e3
         self._queues: dict[tuple, deque] = {}
@@ -103,7 +108,7 @@ class PlanService:
         return {
             "submitted": 0, "served": 0, "failed": 0, "dispatches": 0,
             "batch_sizes": [], "dispatch_s": [], "latencies_s": [],
-            "queue_depth_samples": [],
+            "queue_depth_samples": [], "sanitize_trips": 0,
             "flush_causes": {"fill": 0, "deadline": 0, "drain": 0},
         }
 
@@ -255,6 +260,8 @@ class PlanService:
             plans = self.engine.plan_many(reqs, errors="isolate")
         except Exception as e:  # engine-level failure: fail THIS batch only
             plans = [e] * len(pending)
+        if self.sanitize:
+            plans = [self._sanitize_plan(p) for p in plans]
         t1 = time.perf_counter()
         served = failed = 0
         lats = []
@@ -277,6 +284,21 @@ class PlanService:
             m["served"] += served
             m["failed"] += failed
             m["latencies_s"].extend(lats)
+
+    def _sanitize_plan(self, plan):
+        """NaN/inf tripwire per served plan (``sanitize=True``).  Returns
+        the plan or the NonFiniteError that replaces it."""
+        from repro.analysis.sanitize import NonFiniteError, check_finite
+
+        if isinstance(plan, Exception) or plan is None:
+            return plan
+        try:
+            check_finite(plan, name="plan")
+        except NonFiniteError as e:
+            with self._mlock:
+                self.metrics["sanitize_trips"] += 1
+            return e
+        return plan
 
     # -- lifecycle -----------------------------------------------------------
     def close(self, timeout: Optional[float] = 30.0) -> None:

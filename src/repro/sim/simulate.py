@@ -16,11 +16,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.sim.hardware import PLATFORMS, HardwareConfig
-from repro.sim.timing import (
-    BatchKernelMetrics, KernelMetrics, simulate_batch, simulate_kernel,
-    stack_stats,
-)
+from repro.sim.hardware import PLATFORMS
+from repro.sim.timing import BatchKernelMetrics, simulate_batch, stack_stats
 from repro.tracing.programs import Program
 
 METRIC_NAMES = ("cycles", "ipc", "l1_hit", "l2_hit", "occupancy")

@@ -6,7 +6,6 @@ from __future__ import annotations
 
 from collections import Counter
 
-import numpy as np
 
 from repro.tracing.tracer import BodyInstr as I
 from repro.tracing.tracer import KernelInvocation, make_stats

@@ -14,13 +14,13 @@ split real samplers make between per-SM traces and whole-kernel metrics.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import numpy as np
 
 from repro.tracing.isa import (
-    CLASS_IDS, INSTR_CLASSES, NUM_OPCODES, OPCODE_FLOPS, OPCODE_IDS,
+    CLASS_IDS, INSTR_CLASSES, OPCODE_IDS,
 )
 
 

@@ -1,0 +1,7 @@
+"""Known-bad R5d: kernel matmul without an explicit f32 accumulator."""
+import jax
+
+
+def matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())))

@@ -1,0 +1,9 @@
+"""Known-good R5d: accumulator dtype pinned to f32."""
+import jax
+import jax.numpy as jnp
+
+
+def matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)

@@ -1,0 +1,22 @@
+"""Known-bad R1: host syncs inside a traced region and a dispatch loop."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def traced_sync(x):
+    s = float(x.sum())          # R1a: float() inside a jitted function
+    return np.asarray(x) + s    # R1a: np.asarray inside a jitted function
+
+
+def make_step():
+    return jax.jit(lambda s: s * 2.0)
+
+
+def dispatch_loop(xs):
+    step = make_step()
+    out = []
+    for x in xs:
+        y = step(x)
+        out.append(np.unique(y))   # R1b: numpy on engine output per iter
+    return out

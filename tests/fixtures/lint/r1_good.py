@@ -1,0 +1,28 @@
+"""Known-good R1: trace-time shape math, host-side syncs, and a waiver."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def traced_shape_math(x):
+    scale = np.sqrt(3.0)        # constant-arg numpy: trace-time, legal
+    return x * scale
+
+
+def host_loop(xs):
+    # plain python over host data — float() here never touches a device
+    return [float(v) for v in xs]
+
+
+def make_step():
+    return jax.jit(lambda s: s * 2.0)  # lint: allow[R2] fixture factory
+
+
+def waived_dispatch_loop(xs):
+    step = make_step()
+    out = []
+    for x in xs:
+        y = step(x)
+        # lint: allow[R1] parity reference syncs per iteration by design
+        out.append(np.unique(y))
+    return out

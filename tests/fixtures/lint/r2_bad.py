@@ -1,0 +1,15 @@
+"""Known-bad R2: per-call and in-loop jax.jit with no process-wide cache."""
+import jax
+
+
+def per_call(f, x):
+    g = jax.jit(f)              # R2: fresh trace on every call
+    return g(x)
+
+
+def in_loop(f, xs):
+    out = []
+    for x in xs:
+        g = jax.jit(f)          # R2: fresh trace on every ITERATION
+        out.append(g(x))
+    return out

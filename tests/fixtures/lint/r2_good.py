@@ -1,0 +1,24 @@
+"""Known-good R2: the three cached-executable patterns the repo uses."""
+import functools
+
+import jax
+
+_CACHE = {}
+
+top_level = jax.jit(lambda x: x + 1)        # compiled once per process
+
+
+@functools.lru_cache(maxsize=8)
+def cached_engine(k):
+    return jax.jit(lambda x: x * k)         # cached by the lru decorator
+
+
+def dict_cached(k):
+    if k not in _CACHE:
+        _CACHE[k] = jax.jit(lambda x: x + k)  # cache-dict store
+    return _CACHE[k]
+
+
+class Holder:
+    def setup(self):
+        self._fn = jax.jit(lambda x: x - 1)   # instance-attr store

@@ -1,0 +1,9 @@
+"""Known-bad R3: literal key + reuse across samplers without split."""
+import jax
+
+
+def draws():
+    key = jax.random.PRNGKey(0)             # R3: hard-coded literal key
+    a = jax.random.normal(key, (3,))
+    b = jax.random.uniform(key, (3,))       # R3: key reused, no split
+    return a + b

@@ -1,0 +1,10 @@
+"""Known-good R3: seed-derived keys, split before every draw."""
+import jax
+
+
+def draws(seed):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), 1)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (3,))
+    b = jax.random.uniform(k2, (3,))
+    return a + b

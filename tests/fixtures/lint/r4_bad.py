@@ -1,0 +1,13 @@
+"""Known-bad R4: a buffer read after being donated."""
+import jax
+
+
+def update(state, batch):
+    return state
+
+
+def bad_fit(state, batches):
+    step = jax.jit(update, donate_argnums=(0,))  # lint: allow[R2] fixture
+    out = step(state, batches[0])
+    print(state)                # R4: `state` was donated to step above
+    return out

@@ -1,0 +1,13 @@
+"""Known-good R4: the donated name is rebound by the same statement."""
+import jax
+
+
+def update(state, batch):
+    return state
+
+
+def good_fit(state, batches):
+    step = jax.jit(update, donate_argnums=(0,))  # lint: allow[R2] fixture
+    for batch in batches:
+        state = step(state, batch)   # rebind: old buffer never read again
+    return state

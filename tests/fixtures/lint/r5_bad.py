@@ -1,0 +1,18 @@
+"""Known-bad R5: hard-coded interpret, true-division grid, raw bf16 cast."""
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+
+
+def kernel_body(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def call_site(op, x, n):
+    y = op(x, interpret=True)                 # R5a: bypasses default_interpret
+    z = pl.pallas_call(
+        kernel_body,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(n / 128,),                      # R5b: float grid on odd n
+    )(y)
+    return z.astype(jnp.bfloat16)             # R5c: bypasses precision policy

@@ -1,0 +1,17 @@
+"""Known-good R5: interpret passthrough, cdiv grid, policy-routed dtype."""
+import jax
+import jax.experimental.pallas as pl
+
+
+def kernel_body(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def call_site(op, x, n, policy, interpret=None):
+    y = op(x, interpret=interpret)            # resolved by default_interpret
+    z = pl.pallas_call(
+        kernel_body,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(pl.cdiv(n, 128),),
+    )(y)
+    return policy.cast_compute(z)

@@ -10,10 +10,7 @@ from repro.config import TrainConfig
 from repro.configs import get_arch, list_archs, smoke_arch
 from repro.data import TokenStream
 from repro.launch.steps import make_train_step
-from repro.models import (
-    decode_step, init_decode_state, init_params, lm_loss, prefill,
-)
-from repro.models.frontends import text_len
+from repro.models import decode_step, init_decode_state, init_params, prefill
 from repro.optim import adamw_init
 
 ALL_ARCHS = list_archs()

@@ -6,7 +6,7 @@ import pytest
 pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
-from repro.core.graphs import NODE_INSTR, NODE_PSEUDO, NODE_VAR, build_kernel_graph
+from repro.core.graphs import NODE_INSTR, NODE_VAR, build_kernel_graph
 from repro.tracing.isa import OPCODE_IDS
 from repro.tracing.templates import make_kernel
 from repro.tracing.tracer import WarpTrace

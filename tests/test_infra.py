@@ -13,7 +13,7 @@ from repro.checkpoint import CheckpointManager
 from repro.config import TrainConfig
 from repro.data import TokenStream
 from repro.distributed.fault import Heartbeat, Watchdog, retry
-from repro.optim import TrainState, adamw_init, apply_gradients
+from repro.optim import adamw_init, apply_gradients
 from repro.optim.grad_compress import compress_decompress
 from repro.optim.schedules import cosine_schedule
 
@@ -61,7 +61,7 @@ def test_checkpoint_atomic_no_partial(tmp_path):
 
 def test_checkpoint_elastic_restore_with_shardings(tmp_path):
     """Restore with explicit (new-mesh) shardings — the elastic path."""
-    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
 
     mgr = CheckpointManager(str(tmp_path))
     state = _state()

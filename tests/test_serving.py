@@ -1,7 +1,6 @@
 """repro.serving: continuous batcher, warm pool, loadgen, tenant serving."""
 
 import threading
-import time
 
 import numpy as np
 import pytest

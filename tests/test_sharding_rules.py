@@ -1,7 +1,6 @@
 """Sharding policy engine: divisibility-aware fallbacks, FSDP placement."""
 
 import jax
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)

@@ -1,9 +1,8 @@
 """Tracing substrate + baseline-method behaviour tests."""
 
 import numpy as np
-import pytest
 
-from repro.core.baselines import pka_plan, sieve_plan, stem_root_plan
+from repro.core.baselines import sieve_plan, stem_root_plan
 from repro.core.baselines.pka import pka_features
 from repro.sim.simulate import sampling_error, simulate_program, speedup
 from repro.tracing.isa import OPCODE_IDS

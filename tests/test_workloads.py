@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.core.batching import stream_bins
-from repro.core.rgcn import RGCNConfig
 from repro.core.sampler import GCLSampler, GCLSamplerConfig
 from repro.core.train import GCLTrainConfig
 from repro.launch.sample import run_grid, validate_results
