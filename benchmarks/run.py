@@ -19,7 +19,7 @@ def main() -> None:
                     help="paper-sized runs (all 11 programs, long training)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig45,table3,fig6,e2e,traincost,"
-                         "plans,serve,roofline")
+                         "plans,serve,scaleout,roofline")
     args = ap.parse_args()
     fast = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -49,7 +49,8 @@ def main() -> None:
     from benchmarks import (
         bench_ablations, bench_accuracy_speedup, bench_crossarch,
         bench_e2e_sim, bench_microarch, bench_plan_throughput,
-        bench_roofline, bench_serve_latency, bench_train_throughput,
+        bench_roofline, bench_scaleout, bench_serve_latency,
+        bench_train_throughput,
     )
 
     bench("fig45", bench_accuracy_speedup.run, programs=programs, fast=fast)
@@ -61,6 +62,9 @@ def main() -> None:
     bench("traincost", bench_train_throughput.run, fast=fast)
     bench("plans", bench_plan_throughput.run, fast=fast)
     bench("serve", bench_serve_latency.run, fast=fast)
+    # re-execs itself: --xla_force_host_platform_device_count must be set
+    # before jax initializes, and this process already imported jax
+    bench("scaleout", bench_scaleout.run, fast=fast)
     if args.full or (only and "ablations" in only):
         bench("ablations", bench_ablations.run, fast=True)
     bench("roofline", bench_roofline.run)
@@ -100,6 +104,13 @@ def _derive(name, out) -> str:
             return (f"warm_p99_ratio={out['cold_vs_warm']['p99_ratio']:.1f}x"
                     f";batch_speedup="
                     f"{out['batching_speedup_high_load']:.1f}x")
+        if name == "scaleout":
+            h = out["headline"]
+            return (f"train_speedup={h['train_modelled_speedup']:.1f}x"
+                    f";plan_speedup={h['plan_modelled_speedup']:.1f}x"
+                    f";warm_recompiles={h['warm_recompiles']}"
+                    f";compress_bytes="
+                    f"{h['grad_compress_bytes_reduction']:.1f}x")
         if name == "roofline":
             n = len(out)
             dom = {}

@@ -50,6 +50,7 @@ TRACERS = {
     "jax.lax.associative_scan",
     "jax.experimental.pallas.pallas_call",
     "jax.experimental.shard_map.shard_map",
+    "jax.shard_map",  # the experimental alias graduated to the jax namespace
 }
 
 #: tracers whose FIRST positional argument is not the traced function

@@ -422,11 +422,17 @@ def _sweep_core(x, pmask, init_idx, sil_mask, *, k_max: int, iters: int,
 
 
 def _sweep_fn(batch: int, n_pad: int, d: int, k_max: int, iters: int,
-              use_pallas: bool, sil_block: int):
+              use_pallas: bool, sil_block: int, shards: int = 1):
     """Process-wide executable cache: one jitted sweep per static key.
     Shapes are fixed per key, so each entry compiles exactly once —
-    `ENGINE_STATS['builds']` therefore counts executable builds."""
-    key = (batch, n_pad, d, k_max, iters, use_pallas, sil_block)
+    `ENGINE_STATS['builds']` therefore counts executable builds.
+
+    ``shards`` is the program-axis device count the dispatch will commit
+    its arguments to.  It is part of the key — jit silently re-lowers per
+    input sharding, so an entry serving BOTH replicated and sharded
+    arguments would hide a compile from the builds counter and break the
+    warmup/zero-recompile guarantee (DESIGN.md §11)."""
+    key = (batch, n_pad, d, k_max, iters, use_pallas, sil_block, shards)
     fn = _ENGINE_CACHE.get(key)
     if fn is None:
         ENGINE_STATS["builds"] += 1
@@ -438,9 +444,34 @@ def _sweep_fn(batch: int, n_pad: int, d: int, k_max: int, iters: int,
     return fn
 
 
+def _effective_shards(batch: int, data_shards: int) -> int:
+    """Program-axis shard count for a dispatch: the largest power of two
+    <= ``data_shards`` that divides the (pow2) batch bucket, capped by the
+    devices actually present.  Shared by warm_sweep and the dispatch path
+    so warmed cache keys are exactly the served keys."""
+    if data_shards <= 1 or batch <= 1:
+        return 1
+    s = 1
+    while (s << 1) <= min(batch, data_shards, jax.device_count()):
+        s <<= 1
+    return s
+
+
+def _shard_args(args: tuple, shards: int) -> tuple:
+    """Commit stacked sweep args to a 1-D data mesh over the leading
+    program axis (each device holds batch/shards programs)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+    mesh = Mesh(np.array(jax.devices()[:shards]), ("data",))
+    return tuple(
+        jax.device_put(a, NamedSharding(
+            mesh, PartitionSpec(*(("data",) + (None,) * (a.ndim - 1)))))
+        for a in args)
+
+
 def warm_sweep(batch: int, n_pad: int, d: int, k_max: int = 48,
                iters: int = 50, use_pallas: bool = False, init: str = "host",
-               sil_block: int = 512) -> int:
+               sil_block: int = 512, data_shards: int = 1) -> int:
     """Executable PRE-BUILD entry point for the warm pool: compile the swept
     executable for one ``(batch, points-bucket, dim)`` cache key off the
     serving path, so the first real request of a bucket never pays the
@@ -453,13 +484,16 @@ def warm_sweep(batch: int, n_pad: int, d: int, k_max: int = 48,
     B = bucket_batch(max(batch, 1))
     n_pad = bucket_points(n_pad)
     blk = _round_sil_block(n_pad, sil_block)
+    shards = _effective_shards(B, data_shards)
     before = ENGINE_STATS["builds"]
-    fn = _sweep_fn(B, n_pad, d, k_max, iters, use_pallas, blk)
+    fn = _sweep_fn(B, n_pad, d, k_max, iters, use_pallas, blk, shards)
     shape = ((B, n_pad, d), (B, n_pad), (B, k_max), (B, n_pad))
     if B == 1:
         shape = tuple(s[1:] for s in shape)
     args = (jnp.zeros(shape[0], jnp.float32), jnp.zeros(shape[1], jnp.float32),
             jnp.zeros(shape[2], jnp.int32), jnp.zeros(shape[3], jnp.float32))
+    if shards > 1:
+        args = _shard_args(args, shards)
     jax.block_until_ready(fn(*args))
     if init == "device":
         # the dominant serving case (n > k_max) resolves k_up == k_max
@@ -512,6 +546,7 @@ def sweep_cluster_stack(
     use_pallas: bool = False,
     init: str = "host",
     sil_block: int = 512,
+    data_shards: int = 1,
 ):
     """Plan MANY programs per dispatch: embeddings are padded to a shared
     power-of-two points bucket, stacked on a leading program axis, and every
@@ -523,6 +558,13 @@ def sweep_cluster_stack(
     `init="device"` fold-in draws) are always taken at each program's OWN
     points bucket, so a program's result is independent of which batch it
     rides in.
+
+    ``data_shards > 1`` commits the stacked program axis to a 1-D device
+    mesh (`_effective_shards` resolves the width that divides the pow2
+    batch bucket), so ONE dispatch serves N_devices x the programs of a
+    single-device dispatch.  Programs are row-independent — the sharded
+    sweep is collective-free and its labels are bit-identical to the
+    replicated dispatch.
     """
     xs = [np.asarray(x, np.float32) for x in xs]
     seeds = ([int(seed)] * len(xs) if np.isscalar(seed)
@@ -575,10 +617,14 @@ def sweep_cluster_stack(
         else:
             init_idx[row, :k_up] = _kmeanspp_init(x, k_up, seeds[i])
 
-    fn = _sweep_fn(B, n_pad, d, k_max, iters, use_pallas, blk)
+    shards = _effective_shards(B, data_shards)
+    fn = _sweep_fn(B, n_pad, d, k_max, iters, use_pallas, blk, shards)
     ENGINE_STATS["dispatches"] += 1
-    args = (jnp.asarray(xb), jnp.asarray(pmask), jnp.asarray(init_idx),
-            jnp.asarray(silm))
+    if shards > 1:
+        args = _shard_args((xb, pmask, init_idx, silm), shards)
+    else:
+        args = (jnp.asarray(xb), jnp.asarray(pmask), jnp.asarray(init_idx),
+                jnp.asarray(silm))
     if B > 1:
         labels_all, sil, ok = fn(*args)
     else:

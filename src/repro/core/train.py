@@ -59,8 +59,9 @@ from repro.core.batching import (
 from repro.core.contrastive import info_nce
 from repro.core.graphs import KernelGraph, pad_batch
 from repro.core.rgcn import RGCNConfig
+from repro.distributed.fault import DeviceLost, Watchdog
 from repro.distributed.sharding import (
-    MeshRules, constrain_batch, set_mesh_rules,
+    MeshRules, constrain_batch, set_mesh_rules, shard_batch_put,
 )
 from repro.optim import TrainState, adamw_init, apply_gradients
 
@@ -270,7 +271,9 @@ class ContrastiveTrainer:
     # -- fit -----------------------------------------------------------------
     def fit(self, graphs: list[KernelGraph], verbose=False, *,
             checkpoint_dir: Optional[str] = None, resume: bool = True,
-            interrupt_after: Optional[int] = None):
+            interrupt_after: Optional[int] = None,
+            fault_hook: Optional[callable] = None,
+            watchdog: Optional[Watchdog] = None):
         """Train on an 80/20 split of the program's kernels; returns
         (params, info).
 
@@ -280,6 +283,16 @@ class ContrastiveTrainer:
         from its cursor instead of refitting.  ``interrupt_after=k`` raises
         :class:`FitInterrupted` after the checkpoint at the first chunk
         boundary >= k (test/CI hook).
+
+        Scale-out fault protocol (scan engine only, DESIGN.md §11):
+        ``fault_hook(done_step)`` runs at every chunk boundary and may raise
+        :class:`repro.distributed.fault.DeviceLost` (injection hook for
+        fault tests and real lost-participant detectors); a ``watchdog``
+        brackets each chunk with step_start/step_end and converts a fired
+        straggler SLO into DeviceLost at the SAME boundary.  Either way the
+        engine checkpoints at the boundary before re-raising, so
+        :func:`fit_resilient` can shrink the mesh and resume — losing at
+        most the current chunk, never the fit.
         """
         tc, rc = self.tc, self.rc
         rng_np = np.random.default_rng(tc.seed)
@@ -322,13 +335,19 @@ class ContrastiveTrainer:
                     raise ValueError(
                         "checkpointing requires engine='scan' (the python "
                         "path is a parity shim)")
+                if fault_hook is not None or watchdog is not None:
+                    raise ValueError(
+                        "the fault protocol (fault_hook/watchdog) requires "
+                        "engine='scan' — degradation resumes from chunk-"
+                        "boundary checkpoints the python shim never writes")
                 state, info = self._fit_python(
                     graphs, selections, state, base_key, caps, verbose)
             elif tc.engine == "scan":
                 state, info = self._fit_scan(
                     graphs, selections, state, base_key, caps, verbose,
                     checkpoint_dir=checkpoint_dir, resume=resume,
-                    interrupt_after=interrupt_after)
+                    interrupt_after=interrupt_after,
+                    fault_hook=fault_hook, watchdog=watchdog)
             else:
                 raise ValueError(f"unknown engine {tc.engine!r}")
 
@@ -404,12 +423,15 @@ class ContrastiveTrainer:
         return state, info
 
     def _fit_scan(self, graphs, selections, state, base_key, caps, verbose,
-                  *, checkpoint_dir, resume, interrupt_after):
+                  *, checkpoint_dir, resume, interrupt_after,
+                  fault_hook=None, watchdog=None):
         """Compiled engine: pre-packed epoch plan, per-segment device
-        staging, fixed-length masked scan chunks, log_every-gated host
-        syncs, chunk-boundary checkpoints."""
+        staging (sharded over the mesh's batch axes under MeshRules),
+        fixed-length masked scan chunks, log_every-gated host syncs,
+        chunk-boundary checkpoints."""
         tc = self.tc
         eng = self._engine()
+        wd_fired0 = watchdog.fired if watchdog is not None else 0
         plan = plan_epoch(graphs, selections, **caps)
         steps = plan.n_steps
         chunk_len = min(tc.scan_chunk, bucket_size(max(steps, 1), 1))
@@ -456,14 +478,21 @@ class ContrastiveTrainer:
                     continue
                 n_chunks += 1
                 r0, r1 = lo - seg.start, hi - seg.start
-                stacked = {}
+                rows_np = {}
                 for f, arr in seg.batches.items():
                     rows = arr[r0:r1]
                     if len(rows) < chunk_len:  # edge-pad dead tail steps
                         pad = np.repeat(rows[-1:], chunk_len - len(rows),
                                         axis=0)
                         rows = np.concatenate([rows, pad], axis=0)
-                    stacked[f] = jnp.asarray(rows)
+                    rows_np[f] = rows
+                if watchdog is not None:
+                    watchdog.step_start()
+                # multi-device staging: each device receives only its own
+                # shard of the batch axes (leading scan-steps axis stays
+                # replicated); plain upload on a 1-device data axis
+                stacked = shard_batch_put(rows_np, self.mesh_rules,
+                                          leading=1)
                 abs_idx = np.arange(lo, lo + chunk_len)
                 live = (abs_idx < hi) & (abs_idx >= start_step)
                 keys = jax.vmap(
@@ -472,6 +501,12 @@ class ContrastiveTrainer:
                 state, ys = eng.scan(state, stacked, keys,
                                      jnp.asarray(live))
                 pending.append((ys, live))
+                if watchdog is not None:
+                    # SLO timing needs REAL chunk completion — an opt-in
+                    # sync per chunk, only when a watchdog is armed
+                    # lint: allow[R1] watchdog SLO measurement is a deliberate per-chunk sync
+                    jax.block_until_ready(ys)
+                    watchdog.step_end()
 
                 done = hi
                 if done >= next_log or done == steps:
@@ -492,6 +527,30 @@ class ContrastiveTrainer:
                     raise FitInterrupted(
                         f"fit interrupted at step {done} "
                         f"(interrupt_after={interrupt_after})")
+                # fault boundary: a lost/straggling participant surfaces
+                # HERE (never mid-chunk) — checkpoint, then let the caller
+                # degrade (see fit_resilient)
+                lost = None
+                if fault_hook is not None:
+                    try:
+                        fault_hook(done)
+                    except DeviceLost as e:
+                        lost = e
+                if (lost is None and watchdog is not None
+                        and watchdog.fired > wd_fired0):
+                    lost = DeviceLost(
+                        f"chunk ending at step {done} exceeded the "
+                        f"watchdog SLO (straggling participant)")
+                if lost is not None:
+                    flush()
+                    if mgr is not None:
+                        if done > last_save:
+                            self._save_fit(mgr, state, base_key, history,
+                                           done)
+                            last_save = done
+                            saves += 1
+                        mgr.wait()
+                    raise lost
         flush()
 
         info = {
@@ -505,6 +564,8 @@ class ContrastiveTrainer:
             "checkpoint_saves": saves,
             "scan_chunks": n_chunks,
             "chunk_len": chunk_len,
+            "data_shards": (self.mesh_rules.fsdp_size
+                            if self.mesh_rules else 1),
         }
         return state, info
 
@@ -733,6 +794,63 @@ class ContrastiveTrainer:
             batch = {k: jnp.asarray(v[sel]) for k, v in full.items()}
             outs.append(np.asarray(fn(params, batch)))
         return np.concatenate(outs, axis=0)
+
+
+def fit_resilient(rc: RGCNConfig, tc: GCLTrainConfig,
+                  graphs: list[KernelGraph], *, checkpoint_dir: str,
+                  device_counts: Optional[list] = None,
+                  fault_hook: Optional[callable] = None,
+                  watchdog: Optional[Watchdog] = None,
+                  mesh_axes: tuple = ("data", "model"),
+                  verbose: bool = False):
+    """Degrade-don't-abort scale-out driver (DESIGN.md §11).
+
+    Fits on a data-parallel mesh of ``device_counts[0]`` devices; when a
+    participant is lost or straggles (the fit raises
+    :class:`repro.distributed.fault.DeviceLost` from its fault boundary,
+    AFTER checkpointing), the mesh SHRINKS to the next width and training
+    resumes from that checkpoint instead of aborting.  ``device_counts``
+    defaults to halving widths down to 1 (e.g. 8, 4, 2, 1).
+
+    Returns ``(params, info)`` from the surviving fit, with
+    ``info["degradations"]`` recording each shrink and
+    ``info["data_shards"]`` the width that finished.  Raises DeviceLost
+    only when every width — including the single-device floor — failed.
+    """
+    from repro.launch.mesh import make_data_mesh
+
+    if not checkpoint_dir:
+        raise ValueError("fit_resilient requires a checkpoint_dir — "
+                         "degradation resumes from checkpoints")
+    if device_counts is None:
+        n = jax.device_count()
+        device_counts = []
+        while n >= 1:
+            device_counts.append(n)
+            n //= 2
+    degradations: list[dict] = []
+    last: Optional[DeviceLost] = None
+    for i, ndev in enumerate(device_counts):
+        rules = make_data_mesh(ndev, axes=mesh_axes)
+        trainer = ContrastiveTrainer(rc, tc, mesh_rules=rules)
+        try:
+            params, info = trainer.fit(
+                graphs, verbose, checkpoint_dir=checkpoint_dir,
+                resume=True, fault_hook=fault_hook, watchdog=watchdog)
+            info["degradations"] = degradations
+            info["data_shards"] = ndev
+            return params, info
+        except DeviceLost as e:
+            last = e
+            nxt = device_counts[i + 1] if i + 1 < len(device_counts) else None
+            degradations.append({"from_devices": ndev, "to_devices": nxt,
+                                 "error": str(e)})
+            if verbose:
+                print(f"[fit_resilient] {e} — degrading "
+                      f"{ndev} -> {nxt} devices", flush=True)
+    raise DeviceLost(
+        f"training failed at every mesh width {device_counts} "
+        f"(last: {last})") from last
 
 
 def _jit_cache_size(fn) -> int:

@@ -19,6 +19,17 @@ import time
 from typing import Callable, Optional
 
 
+class DeviceLost(RuntimeError):
+    """A mesh participant is gone or straggling past the SLO.
+
+    Raised at a checkpoint boundary (never mid-step) by the scale-out
+    drivers — the training engine's watchdog/fault hooks and the
+    PlanEngine's sharded dispatch — so the caller can DEGRADE (shrink the
+    mesh, replay from the last checkpoint) instead of aborting.  Test
+    harnesses raise it from injection hooks to exercise the same path.
+    """
+
+
 class Watchdog:
     def __init__(self, slo_factor: float = 5.0, min_timeout_s: float = 30.0,
                  on_straggler: Optional[Callable[[float], None]] = None,

@@ -134,8 +134,13 @@ def spec_for(
                     assign[i] = (rules.model_axis,)
                     break
 
-    # 3) FSDP placement on params
-    if is_param and rules.fsdp:
+    # 3) FSDP placement on params — only when the batch axes are still free:
+    # a dim already carrying them via rule 1 (e.g. a param with a literal
+    # 'batch' dim) must not be duplicated onto a second dim, since a
+    # PartitionSpec may use each mesh axis at most once
+    if is_param and rules.fsdp and not any(
+        a is not None and set(a) & set(rules.batch_axes) for a in assign
+    ):
         fsize = rules.fsdp_size
         for cand in rules.fsdp_pref:
             placed = False
@@ -206,6 +211,50 @@ def constrain_batch(batch: dict, rules: Optional[MeshRules] = None) -> dict:
         if k in PACKED_BATCH_AXES else v
         for k, v in batch.items()
     }
+
+
+def batch_put_spec(field: str, shape: Sequence[int], rules: MeshRules,
+                   *, leading: int = 0) -> P:
+    """PartitionSpec for host->device staging of one packed-batch field.
+
+    The first ``leading`` dims (e.g. the scan-steps axis of a stacked
+    segment) stay replicated; the remaining dims follow PACKED_BATCH_AXES.
+    Pad-or-skip fallback: a 'batch' dim that does not divide the data-axis
+    size (non-pow2 graph counts, tiny buckets) stays REPLICATED instead of
+    producing an invalid argument sharding — pjit argument shardings must
+    divide exactly (see `_shardable`), unlike in-trace constraints."""
+    axes = PACKED_BATCH_AXES.get(field, ())
+    bsize = rules.fsdp_size
+    spec: list = [None] * leading
+    for i, ax in enumerate(axes):
+        dim = shape[leading + i] if leading + i < len(shape) else 0
+        if ax == "batch" and bsize > 1 and dim % bsize == 0:
+            spec.append(rules.batch_axes if len(rules.batch_axes) > 1
+                        else rules.batch_axes[0])
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def shard_batch_put(batch: dict, rules: Optional[MeshRules] = None,
+                    *, leading: int = 0) -> dict:
+    """Stage a packed batch (host numpy arrays) onto the mesh with its
+    PACKED_BATCH_AXES shardings — the multi-device counterpart of the
+    single-device ``jnp.asarray`` upload.  Each device receives only its
+    own batch shard instead of a full replica, so host->device bytes stay
+    constant as the mesh grows.  No-op (plain upload) without rules or on
+    a 1-device data axis."""
+    import jax.numpy as jnp
+
+    if rules is None:
+        rules = current_rules()
+    if rules is None or rules.fsdp_size <= 1:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    out = {}
+    for k, v in batch.items():
+        spec = batch_put_spec(k, tuple(v.shape), rules, leading=leading)
+        out[k] = jax.device_put(v, NamedSharding(rules.mesh, spec))
+    return out
 
 
 def param_shardings(param_axes, abstract_params, rules: MeshRules):

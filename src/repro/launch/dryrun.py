@@ -43,7 +43,10 @@ def _train_config(cfg) -> TrainConfig:
     return TrainConfig(opt_dtype="bfloat16" if n > LARGE_ARCH_PARAMS else "float32")
 
 
-def _lower_one(cfg, shape, mesh, rules, tcfg=None):
+# every (arch, shape) cell is lowered exactly once per process by
+# construction, so a compile cache would never hit — it would only pin
+# dead executables in memory
+def _lower_one(cfg, shape, mesh, rules, tcfg=None):  # lint: allow[R2] one-shot AOT lowering driver
     """Lower + compile a step for `cfg` on `mesh`; returns (compiled, timers)."""
     t0 = time.time()
     with mesh, set_mesh_rules(rules):

@@ -25,3 +25,18 @@ def make_rules(mesh, *, multi_pod: bool = False, **kw) -> MeshRules:
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Single-host debug mesh (uses however many devices exist)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_data_mesh(ndev: int = 0, *, axes: tuple = ("data", "model")) -> MeshRules:
+    """Data-parallel MeshRules over the FIRST ``ndev`` visible devices
+    (0 = all): an ``(ndev, 1)`` mesh with the model axis unsharded.  The
+    scale-out drivers — ``fit_resilient``'s shrinking widths, the scale-out
+    benchmark, the simulated-mesh tests — all build widths through here so
+    they agree on device ORDER (a degraded 4-wide mesh is a prefix of the
+    8-wide one, so arrays resharded on resume move, not reshuffle)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    n = int(ndev) or jax.device_count()
+    devs = np.array(jax.devices()[:n]).reshape(n, 1)
+    return MeshRules(mesh=Mesh(devs, axes))

@@ -46,8 +46,10 @@ def main(argv=None):
     params, _ = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
     max_seq = args.prompt_len + args.tokens + cfg.frontend_tokens
 
-    prefill_fn = jax.jit(lambda p, t, f: tf.prefill(cfg, p, t, f))
-    decode_fn = jax.jit(lambda p, s, t: tf.decode_step(cfg, p, s, t))
+    # one-shot CLI: both jits are built exactly once per process, before
+    # the request loop — there is nothing for a cache to save
+    prefill_fn = jax.jit(lambda p, t, f: tf.prefill(cfg, p, t, f))  # lint: allow[R2] built once per process
+    decode_fn = jax.jit(lambda p, s, t: tf.decode_step(cfg, p, s, t))  # lint: allow[R2] built once per process
 
     rng = np.random.default_rng(args.seed)
     tl = text_len(cfg, args.prompt_len + cfg.frontend_tokens)
@@ -69,13 +71,15 @@ def main(argv=None):
                 )
             t0 = time.time()
             logits, caches, idx = prefill_fn(params, prompts, fe)
-            jax.block_until_ready(logits)
+            jax.block_until_ready(logits)  # lint: allow[R1] prefill latency measurement needs a real sync
             t_prefill = time.time() - t0
 
             # build the decode state at max_seq and splice prefilled caches in
+            # (host-side state construction needs the concrete prefill cursor
+            # — a shape decision made once per batch, not a per-token sync)
             state = tf.init_decode_state(cfg, args.batch, max_seq,
-                                         prefilled=int(idx))
-            state = _splice_prefill(cfg, state, caches, int(idx))
+                                         prefilled=int(idx))  # lint: allow[R1] concrete cursor, once per batch
+            state = _splice_prefill(cfg, state, caches, int(idx))  # lint: allow[R1] same concrete cursor
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             out_tokens = [tok]
             t0 = time.time()

@@ -38,12 +38,14 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field, replace
 from typing import Callable, Optional
 
+import jax
 import numpy as np
 
 from repro.core.clustering import (
     bucket_batch, bucket_points, engine_stats, select_k_and_cluster,
     sweep_cluster_stack, warm_sweep,
 )
+from repro.distributed.fault import DeviceLost
 from repro.sampling.base import plan_from_labels
 from repro.sim.simulate import SamplingPlan
 
@@ -61,9 +63,13 @@ class PlanEngineConfig:
     use_pallas: bool = False     # fused kmeans_assign / silhouette kernels
     init: str = "host"           # 'host' numpy kmeans++ | 'device' fold-in
     engine: str = "sweep"        # 'sweep' | 'sequential' (parity reference)
-    max_batch: int = 8           # programs per compiled dispatch
+    max_batch: int = 8           # programs per compiled dispatch PER DEVICE
     record_timings: bool = False  # stamp per-request dispatch telemetry
     overlap_plan_build: bool = True  # build plans while the next chunk runs
+    #: program-axis device count for sharded dispatches: one dispatch then
+    #: serves data_devices x max_batch programs.  0 = every device the
+    #: backend exposes; 1 = single-device (the pre-scale-out behavior)
+    data_devices: int = 0
 
 
 @dataclass
@@ -104,11 +110,20 @@ class PlanEngine:
         #: per-instance serving counters (process-wide compile counters
         #: live in repro.core.clustering.ENGINE_STATS)
         self.stats = self._fresh_stats()
+        #: program-axis shard width for sweep dispatches.  Starts at the
+        #: configured device count and only ever SHRINKS (halves) when a
+        #: dispatch raises DeviceLost — degrade, don't abort.
+        self._data_shards = max(1, self.cfg.data_devices or jax.device_count())
+        #: scale-out fault injection point: called before every compiled
+        #: dispatch; raise DeviceLost from it to exercise the degradation
+        #: path (halve shards, retry the same chunk)
+        self.fault_hook: Optional[Callable[[], None]] = None
 
     @staticmethod
     def _fresh_stats() -> dict:
         return {"programs": 0, "dispatches": 0, "errors": 0,
-                "warmed_executables": 0, "bucket_hist": []}
+                "warmed_executables": 0, "degraded_dispatches": 0,
+                "bucket_hist": []}
 
     def reset_stats(self) -> None:
         """Zero the INSTANCE counters (long-lived servers window their
@@ -158,7 +173,8 @@ class PlanEngine:
             for b in batch_sizes:
                 built += warm_sweep(
                     int(b), int(points), int(dim), k_max=c.k_max,
-                    iters=c.iters, use_pallas=c.use_pallas, init=c.init)
+                    iters=c.iters, use_pallas=c.use_pallas, init=c.init,
+                    data_shards=self._data_shards)
         self.stats["warmed_executables"] += built
         return built
 
@@ -168,6 +184,27 @@ class PlanEngine:
         return dict(k_max=c.k_max, sil_floor=c.sil_floor, tie_tol=c.tie_tol,
                     tiny_n=c.tiny_n, sil_cap=c.sil_cap, iters=c.iters,
                     use_pallas=c.use_pallas, init=c.init)
+
+    def _dispatch_chunk(self, xs: list, seeds: list):
+        """One compiled sweep dispatch, with scale-out degradation: a
+        DeviceLost — raised by the injected ``fault_hook`` or the sharded
+        dispatch itself — halves the program-axis shard width and retries
+        the SAME chunk, so a lost/straggling participant shrinks
+        throughput instead of dropping requests.  Requests are only at a
+        chunk boundary here (nothing is half-served), matching the
+        training engine's checkpoint-boundary contract."""
+        while True:
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook()
+                return sweep_cluster_stack(
+                    xs, seed=seeds, data_shards=self._data_shards,
+                    **self._cluster_kwargs())
+            except DeviceLost:
+                if self._data_shards <= 1:
+                    raise
+                self._data_shards //= 2
+                self.stats["degraded_dispatches"] += 1
 
     def _stamp(self, results: list, key, chunk: int, dispatch_s: float):
         """record_timings hook: dispatch telemetry on every info dict (flows
@@ -239,18 +276,20 @@ class PlanEngine:
                 (bucket_points(len(norm[i])), norm[i].shape[1]), []).append(i)
         # use_pallas sweeps stay unbatched: pallas_call inside vmap leans on
         # batching rules we don't exercise elsewhere — the cached executable
-        # is still shared across programs
-        cap = 1 if self.cfg.use_pallas else max(1, self.cfg.max_batch)
+        # is still shared across programs.  Sharded dispatches scale the cap
+        # by the mesh width: one dispatch serves data_shards x max_batch
+        # programs, each device sweeping its own max_batch slice.
+        cap = (1 if self.cfg.use_pallas
+               else max(1, self.cfg.max_batch) * max(1, self._data_shards))
         for key, idxs in sorted(groups.items()):
             self._bump_bucket(key, len(idxs))
             for lo in range(0, len(idxs), cap):
                 chunk = idxs[lo:lo + cap]
                 t0 = time.perf_counter()
                 try:
-                    res = sweep_cluster_stack(
+                    res = self._dispatch_chunk(
                         [norm[i] for i in chunk],
-                        seed=[seeds[i] for i in chunk],
-                        **self._cluster_kwargs())
+                        [seeds[i] for i in chunk])
                 except Exception:
                     if errors == "raise":
                         raise
@@ -345,4 +384,5 @@ class PlanEngine:
         g = engine_stats()
         return dict(self.stats, builds=g["builds"],
                     cache_entries=g["cache_entries"],
-                    process_dispatches=g["dispatches"])
+                    process_dispatches=g["dispatches"],
+                    data_shards=self._data_shards)

@@ -80,6 +80,7 @@ class PlanService:
                  max_batch: Optional[int] = None,
                  max_delay_ms: float = 5.0,
                  sanitize: bool = False,
+                 fault_hook=None,
                  **engine_overrides):
         if engine is None:
             kw = dict(max_batch=max_batch or 8, record_timings=True)
@@ -88,6 +89,12 @@ class PlanService:
         elif engine_overrides:
             raise ValueError("pass engine_overrides only without engine")
         self.engine = engine
+        if fault_hook is not None:
+            # scale-out fault injection (tests / chaos drills): the engine
+            # degrades — halves its shard width and retries — rather than
+            # failing futures; the drop shows up in stats()["engine"]
+            # (degraded_dispatches, data_shards)
+            self.engine.fault_hook = fault_hook
         #: when on, every served plan passes the NaN/inf tripwire
         #: (repro.analysis.sanitize.check_finite); a non-finite plan fails
         #: only its own future, like any isolated engine error

@@ -1,7 +1,29 @@
 # NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 CPU device.
 # Only launch/dryrun.py forces 512 host devices (and only in its own process).
+# Scale-out tests opt in via the `scaleout` marker: the CI job (and anyone
+# running them locally) sets XLA_FLAGS=--xla_force_host_platform_device_count=8
+# in the ENVIRONMENT before launching pytest; on an unforced interpreter they
+# auto-skip below.
 import numpy as np
 import pytest
+
+SCALEOUT_MIN_DEVICES = 8
+
+
+def pytest_collection_modifyitems(config, items):
+    if not any(item.get_closest_marker("scaleout") for item in items):
+        return  # don't initialize jax when no scale-out test was collected
+    import jax
+
+    if jax.device_count() >= SCALEOUT_MIN_DEVICES:
+        return
+    skip = pytest.mark.skip(
+        reason=f"needs >= {SCALEOUT_MIN_DEVICES} jax devices; run under "
+               f"XLA_FLAGS=--xla_force_host_platform_device_count="
+               f"{SCALEOUT_MIN_DEVICES}")
+    for item in items:
+        if item.get_closest_marker("scaleout"):
+            item.add_marker(skip)
 
 
 @pytest.fixture(scope="session")

@@ -35,6 +35,8 @@ def rules_of(path) -> set:
     ("R1", "r1_bad.py", "r1_good.py"),
     ("R2", "r2_bad.py", "r2_good.py"),
     ("R3", "r3_bad.py", "r3_good.py"),
+    ("R1", "r1_shardmap_bad.py", "r1_shardmap_good.py"),
+    ("R3", "r3_shardmap_bad.py", "r3_shardmap_good.py"),
     ("R4", "r4_bad.py", "r4_good.py"),
     ("R5", "r5_bad.py", "r5_good.py"),
 ])
@@ -59,6 +61,18 @@ def test_r1_flags_both_traced_and_dispatch_loop_sites():
     assert "traced_sync" in symbols          # R1a inside the jitted fn
     assert "dispatch_loop" in symbols        # R1b on the engine output
     assert len(findings) >= 3
+
+
+def test_r1_shard_map_bodies_are_traced():
+    """Both spellings mark the wrapped body traced: the
+    jax.experimental.shard_map import AND the graduated jax.shard_map
+    alias (each fixture body syncs, so each must be flagged)."""
+    findings = [f for f in lint_paths([FIXTURES / "r1_shardmap_bad.py"])
+                if f.rule == "R1"]
+    symbols = {f.symbol for f in findings}
+    assert "psum_mean.body" in symbols      # from-import spelling
+    assert "scaled.body2" in symbols        # jax.shard_map alias
+    assert len(findings) == 3
 
 
 def test_r2_distinguishes_loop_from_per_call():

@@ -1,0 +1,367 @@
+"""Fault tolerance (distributed/fault.py + the engines' degrade paths).
+
+The primitives (Watchdog, Heartbeat, retry) and the 1-device degradation
+paths run everywhere; the multi-width mesh-shrink scenarios carry the
+`scaleout` marker (forced-8-device interpreter only, see conftest).
+"""
+
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.distributed.fault import DeviceLost, Heartbeat, Watchdog, retry
+
+# ---------------------------------------------------------------------------
+# Watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_fires_on_straggler():
+    seen = []
+    wd = Watchdog(min_timeout_s=0.02, on_straggler=seen.append)
+    wd.step_start()
+    time.sleep(0.1)
+    wd.step_end()
+    assert wd.fired == 1
+    assert seen and seen[0] == pytest.approx(0.02)
+
+
+def test_watchdog_quiet_within_slo():
+    wd = Watchdog(min_timeout_s=5.0)
+    for _ in range(3):
+        wd.step_start()
+        dt = wd.step_end()
+        assert dt < 1.0
+    assert wd.fired == 0
+    assert wd._timer is None  # step_end cancels the armed timer
+
+
+def test_watchdog_timeout_tracks_median_window():
+    wd = Watchdog(slo_factor=4.0, min_timeout_s=0.001, window=3)
+    assert wd.timeout_s() == 0.001  # no history -> floor
+    wd._times = [0.5, 1.0, 2.0]
+    assert wd.timeout_s() == pytest.approx(4.0)  # 4 x median(1.0)
+    # window keeps only the trailing 3 samples
+    wd._times = []
+    for dt in (0.1, 0.2, 0.3, 10.0):
+        wd._t0 = time.time() - dt
+        wd._timer = None
+        wd.step_end()
+    assert len(wd._times) == 3
+    assert wd._times[0] == pytest.approx(0.2, abs=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_liveness_file(tmp_path):
+    path = str(tmp_path / "hb.json")
+    hb = Heartbeat(path, interval_s=30.0, host_id=3)
+    hb.update(17)
+    hb.beat()
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["host"] == 3 and doc["step"] == 17
+    assert doc["time"] == pytest.approx(time.time(), abs=5.0)
+    # no stale tmp file left behind (atomic swap)
+    assert not (tmp_path / "hb.json.tmp").exists()
+
+
+def test_heartbeat_thread_start_stop(tmp_path):
+    path = str(tmp_path / "hb.json")
+    hb = Heartbeat(path, interval_s=0.01)
+    hb.start()
+    time.sleep(0.05)
+    hb.stop()
+    t0 = json.load(open(path))["time"]
+    time.sleep(0.05)
+    assert json.load(open(path))["time"] == t0  # stopped: no more beats
+
+
+# ---------------------------------------------------------------------------
+# retry
+# ---------------------------------------------------------------------------
+
+
+def test_retry_recovers_from_transient_failures(monkeypatch):
+    sleeps = []
+    monkeypatch.setattr(time, "sleep", sleeps.append)
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    assert retry(flaky, attempts=3, backoff_s=0.5) == "ok"
+    assert sleeps == [0.5, 1.0]  # bounded exponential backoff
+
+
+def test_retry_exhausts_and_reraises(monkeypatch):
+    monkeypatch.setattr(time, "sleep", lambda s: None)
+    calls = {"n": 0}
+
+    def always_fails():
+        calls["n"] += 1
+        raise OSError("down")
+
+    with pytest.raises(OSError, match="down"):
+        retry(always_fails, attempts=3, backoff_s=0.0)
+    assert calls["n"] == 3
+
+
+def test_retry_only_catches_declared_exceptions(monkeypatch):
+    monkeypatch.setattr(time, "sleep", lambda s: None)
+    with pytest.raises(ValueError):
+        retry(lambda: (_ for _ in ()).throw(ValueError("not transient")),
+              attempts=3)
+
+
+# ---------------------------------------------------------------------------
+# training engine: fault boundary + degrade-don't-abort (1 device)
+# ---------------------------------------------------------------------------
+
+
+def _graphs(n=6, cap=48):
+    from repro.core.graphs import build_kernel_graph
+    from repro.tracing.templates import make_kernel
+
+    ks = [make_kernel(f"k{i}", "gemm",
+                      {"M": 128 * (i % 3 + 1), "N": 128, "K": 128}, i, seed=i)
+          for i in range(n)]
+    return [build_kernel_graph(k.trace(cap_warps=2, cap_instr=cap))
+            for k in ks]
+
+
+def _tc(**kw):
+    from repro.core.train import GCLTrainConfig
+
+    base = dict(steps=8, batch_size=4, scan_chunk=4, log_every=50,
+                checkpoint_every=4)
+    base.update(kw)
+    return GCLTrainConfig(**base)
+
+
+def test_fit_fault_hook_checkpoints_then_raises(tmp_path):
+    """An injected DeviceLost surfaces at the chunk boundary AFTER the
+    engine checkpointed — nothing computed is lost."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core.rgcn import RGCNConfig
+    from repro.core.train import ContrastiveTrainer
+
+    ck = str(tmp_path / "ck")
+
+    def hook(done):
+        if done >= 4:
+            raise DeviceLost("injected participant loss")
+
+    with pytest.raises(DeviceLost, match="injected"):
+        ContrastiveTrainer(RGCNConfig(), _tc()).fit(
+            _graphs(), checkpoint_dir=ck, fault_hook=hook)
+    assert CheckpointManager(ck).latest_step() >= 4
+
+
+def test_fit_python_engine_rejects_fault_protocol():
+    from repro.core.rgcn import RGCNConfig
+    from repro.core.train import ContrastiveTrainer
+
+    with pytest.raises(ValueError, match="scan"):
+        ContrastiveTrainer(RGCNConfig(), _tc(engine="python",
+                                             checkpoint_every=0)).fit(
+            _graphs(), fault_hook=lambda done: None)
+
+
+def test_fit_watchdog_slo_becomes_device_lost(tmp_path):
+    """A fired watchdog converts into DeviceLost at the SAME chunk
+    boundary (after checkpointing), never mid-step."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core.rgcn import RGCNConfig
+    from repro.core.train import ContrastiveTrainer
+
+    ck = str(tmp_path / "ck")
+    wd = Watchdog(min_timeout_s=1e-4)  # the first chunk always exceeds this
+    with pytest.raises(DeviceLost, match="watchdog SLO"):
+        ContrastiveTrainer(RGCNConfig(), _tc()).fit(
+            _graphs(), checkpoint_dir=ck, watchdog=wd)
+    assert wd.fired >= 1
+    assert CheckpointManager(ck).latest_step() is not None
+
+
+def test_fit_resilient_degrades_and_finishes(tmp_path):
+    """One injected loss -> shrink to the next width, resume from the
+    checkpoint, finish the full step count (device_counts=[1, 1] keeps
+    this scenario runnable on a single device)."""
+    from repro.core.rgcn import RGCNConfig
+    from repro.core.train import fit_resilient
+
+    state = {"hits": 0}
+
+    def hook(done):
+        if state["hits"] == 0 and done >= 4:
+            state["hits"] += 1
+            raise DeviceLost("injected")
+
+    params, info = fit_resilient(
+        RGCNConfig(), _tc(), _graphs(), checkpoint_dir=str(tmp_path / "ck"),
+        device_counts=[1, 1], fault_hook=hook)
+    assert len(info["degradations"]) == 1
+    assert info["degradations"][0]["from_devices"] == 1
+    assert info["resumed_from"] >= 4
+    assert len(info["history"]) == 8  # every step accounted for
+    assert params is not None
+
+
+def test_fit_resilient_requires_checkpoint_dir():
+    from repro.core.rgcn import RGCNConfig
+    from repro.core.train import fit_resilient
+
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        fit_resilient(RGCNConfig(), _tc(), _graphs(), checkpoint_dir="")
+
+
+def test_fit_resilient_exhausts_every_width(tmp_path):
+    from repro.core.rgcn import RGCNConfig
+    from repro.core.train import fit_resilient
+
+    def always_lost(done):
+        raise DeviceLost("hard down")
+
+    with pytest.raises(DeviceLost, match="every mesh width"):
+        fit_resilient(RGCNConfig(), _tc(), _graphs(),
+                      checkpoint_dir=str(tmp_path / "ck"),
+                      device_counts=[1, 1], fault_hook=always_lost)
+
+
+# ---------------------------------------------------------------------------
+# plan engine degrade loop (1 device: shard-width bookkeeping only)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_engine_degrades_on_device_lost():
+    """A DeviceLost from the fault hook halves the shard width and retries
+    the SAME chunk — requests are served, the drop is counted."""
+    from repro.sampling.engine import PlanEngine
+
+    rng = np.random.default_rng(0)
+    embs = [rng.normal(size=(40, 4)).astype(np.float32) for _ in range(4)]
+    eng = PlanEngine(k_max=4, iters=8, data_devices=2)
+    fired = {"n": 0}
+
+    def hook():
+        if fired["n"] == 0:
+            fired["n"] += 1
+            raise DeviceLost("injected")
+
+    eng.fault_hook = hook
+    results = eng.cluster_many(embs)
+    assert all(not isinstance(r, Exception) for r in results)
+    st = eng.engine_stats()
+    assert st["degraded_dispatches"] == 1
+    assert st["data_shards"] == 1
+    assert st["errors"] == 0
+
+
+def test_plan_engine_raises_at_one_shard_floor():
+    """Below one shard there is nothing left to degrade to: DeviceLost
+    propagates (errors='raise') so the caller sees the hard failure."""
+    from repro.sampling.engine import PlanEngine
+
+    rng = np.random.default_rng(0)
+    embs = [rng.normal(size=(40, 4)).astype(np.float32)]
+    eng = PlanEngine(k_max=4, iters=8, data_devices=1)
+
+    def hook():
+        raise DeviceLost("hard down")
+
+    eng.fault_hook = hook
+    with pytest.raises(DeviceLost, match="hard down"):
+        eng.cluster_many(embs)
+
+
+def test_plan_service_surfaces_degradation():
+    """PlanService stats expose the engine's degradation counters."""
+    from repro.sampling.engine import PlanRequest
+    from repro.serving import PlanService
+
+    rng = np.random.default_rng(0)
+    fired = {"n": 0}
+
+    def hook():
+        if fired["n"] == 0:
+            fired["n"] += 1
+            raise DeviceLost("injected")
+
+    with PlanService(max_batch=4, max_delay_ms=1.0, data_devices=2,
+                     fault_hook=hook, k_max=4, iters=8) as svc:
+        futs = [svc.submit(PlanRequest(
+            rng.normal(size=(40, 4)).astype(np.float32),
+            np.arange(40), "m")) for _ in range(4)]
+        plans = [f.result(timeout=120) for f in futs]
+    assert all(p is not None and not isinstance(p, Exception)
+               for p in plans)
+    st = svc.stats()
+    assert st["engine"]["degraded_dispatches"] == 1
+    assert st["engine"]["data_shards"] == 1
+    assert st["failed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# multi-width mesh shrink (simulated 8-device mesh only)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.scaleout
+def test_fit_resilient_shrinks_mesh_8_to_4(tmp_path):
+    """The real scale-out scenario: a participant lost on the 8-wide mesh
+    degrades to 4, resumes from the checkpoint, and finishes."""
+    from repro.core.rgcn import RGCNConfig
+    from repro.core.train import fit_resilient
+
+    state = {"hits": 0}
+
+    def hook(done):
+        if state["hits"] == 0 and done >= 4:
+            state["hits"] += 1
+            raise DeviceLost("injected participant loss")
+
+    params, info = fit_resilient(
+        RGCNConfig(), _tc(), _graphs(n=8), checkpoint_dir=str(tmp_path / "ck"),
+        device_counts=[8, 4], fault_hook=hook)
+    assert info["data_shards"] == 4
+    assert info["degradations"] == [
+        {"from_devices": 8, "to_devices": 4,
+         "error": "injected participant loss"}]
+    assert len(info["history"]) == 8
+
+
+@pytest.mark.scaleout
+def test_plan_engine_sharded_degrade_keeps_parity():
+    """Degrading 8 -> 4 shards mid-serve must not change any program's
+    labels (the shard width is an execution detail, not math)."""
+    from repro.sampling.engine import PlanEngine
+
+    rng = np.random.default_rng(1)
+    embs = [rng.normal(size=(40 + i, 8)).astype(np.float32)
+            for i in range(8)]
+    reference = PlanEngine(k_max=6, iters=8,
+                           engine="sequential").cluster_many(embs)
+    eng = PlanEngine(k_max=6, iters=8, max_batch=1, data_devices=8)
+    fired = {"n": 0}
+
+    def hook():
+        if fired["n"] == 0:
+            fired["n"] += 1
+            raise DeviceLost("injected")
+
+    eng.fault_hook = hook
+    results = eng.cluster_many(embs)
+    st = eng.engine_stats()
+    assert st["degraded_dispatches"] == 1 and st["data_shards"] == 4
+    for (lab, info), (lab_r, info_r) in zip(results, reference):
+        np.testing.assert_array_equal(np.asarray(lab), np.asarray(lab_r))
+        assert info["k"] == info_r["k"]

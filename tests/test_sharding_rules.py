@@ -7,7 +7,9 @@ pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import MeshRules, spec_for
+from repro.distributed.sharding import (
+    MeshRules, PACKED_BATCH_AXES, batch_put_spec, spec_for,
+)
 
 
 @pytest.fixture(scope="module")
@@ -108,3 +110,72 @@ def test_spec_always_valid(rules, rules_names, dims, is_param):
             continue
         flat.extend(s if isinstance(s, tuple) else (s,))
     assert len(flat) == len(set(flat))
+
+
+def test_param_batch_dim_blocks_fsdp_duplicate(rules):
+    """Regression (rule-3 guard): a param whose literal 'batch' dim took
+    the data axis must NOT get a second 'data' placement from FSDP — a
+    PartitionSpec may use each mesh axis at most once."""
+    spec = spec_for(("batch", "embed", "ffn"), (16, 8192, 29568),
+                    rules=rules, is_param=True)
+    assert spec == P("data", None, "model")
+    flat = [a for s in spec if s is not None
+            for a in (s if isinstance(s, tuple) else (s,))]
+    assert len(flat) == len(set(flat))
+
+
+# ---------------------------------------------------------------------------
+# packed-batch staging specs (scale-out host->device path)
+# ---------------------------------------------------------------------------
+
+
+def _put_rules(data: int):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class R(MeshRules):
+        @property
+        def fsdp_size(self):
+            return data
+
+    return R(mesh=mesh, batch_axes=("data",))
+
+
+@pytest.mark.parametrize("field", sorted(PACKED_BATCH_AXES))
+def test_batch_put_spec_pad_or_skip_non_divisible(field):
+    """6 programs on 4 devices (and every other non-divisible size) must
+    REPLICATE, never emit an invalid argument sharding: pjit input
+    shardings have to divide exactly."""
+    rules = _put_rules(4)
+    ndim = len(PACKED_BATCH_AXES[field])
+    shape = (6,) + (3,) * (ndim - 1)
+    spec = batch_put_spec(field, shape, rules)
+    assert spec == P(*([None] * ndim))
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.sampled_from(sorted(PACKED_BATCH_AXES)),
+    st.integers(1, 4096),
+    st.sampled_from([1, 2, 4, 8]),
+    st.integers(0, 1),
+)
+def test_batch_put_spec_always_valid(field, dim, data, leading):
+    """MeshRules placement + packed-batch staging never produce an invalid
+    PartitionSpec: leading (scan) dims replicated, a sharded dim always
+    divides the data-axis size, each mesh axis used at most once."""
+    rules = _put_rules(data)
+    naxes = len(PACKED_BATCH_AXES[field])
+    shape = (5,) * leading + (dim,) + (7,) * (naxes - 1)
+    spec = batch_put_spec(field, shape, rules, leading=leading)
+    assert len(spec) == leading + naxes
+    for i in range(leading):
+        assert spec[i] is None
+    flat = []
+    for i, s in enumerate(spec):
+        if s is None:
+            continue
+        assert shape[i] % data == 0  # exact divisibility or replicate
+        flat.extend(s if isinstance(s, tuple) else (s,))
+    assert len(flat) == len(set(flat))
+    if data == 1:  # 1-wide data axis: nothing to shard, ever
+        assert all(s is None for s in spec)
