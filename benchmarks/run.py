@@ -19,7 +19,7 @@ def main() -> None:
                     help="paper-sized runs (all 11 programs, long training)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig45,table3,fig6,e2e,traincost,"
-                         "plans,serve,scaleout,roofline")
+                         "encode,plans,serve,scaleout,roofline")
     args = ap.parse_args()
     fast = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -48,9 +48,9 @@ def main() -> None:
 
     from benchmarks import (
         bench_ablations, bench_accuracy_speedup, bench_crossarch,
-        bench_e2e_sim, bench_microarch, bench_plan_throughput,
-        bench_roofline, bench_scaleout, bench_serve_latency,
-        bench_train_throughput,
+        bench_e2e_sim, bench_encode_fusion, bench_microarch,
+        bench_plan_throughput, bench_roofline, bench_scaleout,
+        bench_serve_latency, bench_train_throughput,
     )
 
     bench("fig45", bench_accuracy_speedup.run, programs=programs, fast=fast)
@@ -60,6 +60,7 @@ def main() -> None:
           programs=("nw", "lud") if fast else bench_e2e_sim.PROGRAMS,
           fast=fast)
     bench("traincost", bench_train_throughput.run, fast=fast)
+    bench("encode", bench_encode_fusion.run, fast=fast)
     bench("plans", bench_plan_throughput.run, fast=fast)
     bench("serve", bench_serve_latency.run, fast=fast)
     # re-execs itself: --xla_force_host_platform_device_count must be set
@@ -94,6 +95,12 @@ def _derive(name, out) -> str:
         if name == "traincost":
             rates = [v["s_per_100_kernels"] for v in out.values()]
             return f"s_per_100_kernels={max(rates):.1f}"
+        if name == "encode":
+            return (f"bytes_reduction="
+                    f"{out['modelled']['reduction_x']:.2f}x"
+                    f";parity={out['parity_max_abs_diff']:.1e}"
+                    f";overlap={out['prefetch']['overlap_fraction']:.2f}"
+                    f";warm_recompiles={out['warm_recompiles']}")
         if name == "ablations":
             worst = max(
                 r["error_pct"] for prog in out.values() for r in prog.values()

@@ -53,6 +53,18 @@ TRACERS = {
     "jax.shard_map",  # the experimental alias graduated to the jax namespace
 }
 
+#: fully-qualified fids of kernel-package entry points that must ALWAYS be
+#: trace entries.  Decorator detection (functools.partial(jax.jit, ...) /
+#: jax.custom_vjp) already finds these today; the explicit registry pins
+#: them so a refactor of the decorator spelling can't silently drop a
+#: Pallas launch out of the traced fixed point (R1/R5 would then stop
+#: looking inside it).
+KERNEL_ENTRIES = {
+    "repro.kernels.rgcn_fused.kernel:rgcn_fused_flat_fwd",
+    "repro.kernels.rgcn_fused.ops:rgcn_fused_agg_flat",
+    "repro.kernels.rgcn_fused.ops:fused_two_level_readout",
+}
+
 #: tracers whose FIRST positional argument is not the traced function
 #: (the traced callable sits at these positions instead)
 _TRACER_FN_POS = {
@@ -379,6 +391,9 @@ def build_graph(indexes: list[ModuleIndex]) -> dict[str, FunctionInfo]:
         modnames.add(idx.module)
         for info in idx.functions.values():
             funcs[info.fid] = info
+    for fid in KERNEL_ENTRIES:      # registered kernel launches (see above)
+        if fid in funcs:
+            funcs[fid].traced_entry = True
 
     def to_fid(callee: str) -> Optional[str]:
         """Map a resolved dotted path to a known function id."""

@@ -80,6 +80,16 @@ def augment_view_packed(rng, batch):
     out = dict(batch)
     out["node_mask"] = node_mask
     out["edge_mask"] = edge_mask
+    if "edge_norm" in batch:
+        # the view's edge_mask changed, so the hoisted degree normalizer
+        # (pack_graphs, schema v2) is stale for this view — re-derive it
+        # once here (still hoisted OUT of the per-layer loop)
+        from repro.core.graphs import NUM_RELATIONS
+        from repro.core.rgcn import edge_norm_packed
+
+        out["edge_norm"] = edge_norm_packed(
+            batch["edge_dst"], batch["edge_type"], edge_mask, P, NUM_RELATIONS
+        )
     return out, flags[:, 2]
 
 

@@ -12,6 +12,9 @@ and ONE flat edge array:
   edge axis (Q,): edge_src / edge_dst (node-offset-shifted into the flat
                   node axis, sorted by edge_dst for the blocked SpMM kernel),
                   edge_type / edge_mask / edge_graph
+                  edge_norm — hoisted per-edge degree normalizer
+                  1/|N_r(dst_e)| (schema v2; h-independent, so computed once
+                  here instead of per RGCN layer per step — DESIGN.md §12)
   warp axis (W,): warp_graph — graph id per warp segment (warp validity
                   is derived in the readout from per-warp node counts)
   graph axis (G,): graph_mask, trunc_nodes / trunc_edges accounting
@@ -34,7 +37,12 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.graphs import KernelGraph
+from repro.core.graphs import NUM_RELATIONS, KernelGraph
+
+#: packed-batch dict schema version.  v2 added the precomputed ``edge_norm``
+#: field; every consumer falls back to in-trace recomputation when the key
+#: is absent (core/rgcn._rgcn_layer_packed), so v1 batches stay valid.
+PACK_SCHEMA = 2
 
 # Bucket floors: the smallest padded size per axis.  Everything above the
 # floor rounds up to the next power of two, so #buckets per axis is
@@ -194,6 +202,16 @@ def pack_graphs(
     order = np.argsort(batch["edge_dst"][:Q_used], kind="stable")
     for k in ("edge_src", "edge_dst", "edge_type", "edge_graph", "edge_mask"):
         batch[k][:Q_used] = batch[k][:Q_used][order]
+
+    # hoisted degree normalizer 1/|N_r(v)| (schema v2, DESIGN.md §12):
+    # structure-only, so it is derived ONCE here instead of per layer per
+    # step in-trace.  Bit-identical to core/rgcn.edge_norm_packed (integer-
+    # valued mask sums + the same 1/max IEEE division); padding rows (mask 0)
+    # get the same formula so the jnp twin matches on every element.
+    key = batch["edge_dst"].astype(np.int64) * NUM_RELATIONS + batch["edge_type"]
+    deg = np.zeros(P * NUM_RELATIONS, np.float32)
+    np.add.at(deg, key, batch["edge_mask"])
+    batch["edge_norm"] = np.float32(1.0) / np.maximum(deg[key], np.float32(1.0))
 
     meta = PackMeta(
         n_graphs=G, node_off=node_off, edge_off=edge_off, warp_off=warp_off,

@@ -243,32 +243,59 @@ def encode(p, rc: RGCNConfig, batch, max_warps: int, *, rng=None, train=False,
 # ---------------------------------------------------------------------------
 
 
+def edge_norm_packed(dst, etype, emask, num_nodes: int, num_relations: int):
+    """Per-edge degree normalizer 1/|N_r(dst_e)| for a packed batch.
+
+    h-independent (pure graph structure: dst/etype/edge_mask), so it is
+    hoisted out of the layer loop entirely: core/batching.pack_graphs
+    precomputes it once per packed batch (numpy, bit-identical — integer-
+    valued mask sums and the same 1/max(deg,1) IEEE division), and
+    core/augment.py recomputes it per augmented view whose edge_mask
+    changed.  This function is the single definition both use and the
+    in-trace fallback for batches that predate the ``edge_norm`` field."""
+    key = dst * num_relations + etype
+    deg = jax.ops.segment_sum(emask, key,
+                              num_segments=num_nodes * num_relations)
+    return 1.0 / jnp.maximum(jnp.take(deg, key), 1.0)
+
+
 def _rgcn_layer_packed(lp, rc: RGCNConfig, h, batch, *, last, rng=None,
-                       train=False):
+                       train=False, unfused_ref=False):
     P, _ = h.shape
     R = rc.num_relations
     src, dst, etype = batch["edge_src"], batch["edge_dst"], batch["edge_type"]
     emask = batch["edge_mask"]
     if tuple(rc.relations_used) != (0, 1, 2, 3):
+        # the relation filter edits emask, so any precomputed normalizer
+        # (derived from the FULL mask) is stale — re-derive per layer
         keep = jnp.isin(etype, jnp.asarray(rc.relations_used))
         emask = emask * keep
-
-    # per-(dst, relation) in-degree for normalization 1/|N_r(v)|
-    key = dst * R + etype
-    deg = jax.ops.segment_sum(emask, key, num_segments=P * R)
-    norm = 1.0 / jnp.maximum(jnp.take(deg, key), 1.0)
+        norm = edge_norm_packed(dst, etype, emask, P, R)
+    elif unfused_ref or "edge_norm" not in batch:
+        norm = edge_norm_packed(dst, etype, emask, P, R)
+    else:
+        norm = batch["edge_norm"]                       # hoisted (pack_graphs)
+    wnorm = emask * norm                                # (Q,)
 
     coef = jnp.take(lp["comb"], etype, axis=0)          # (Q,nb)
-    w = coef * (emask * norm)[:, None]                  # (Q,nb)
-    if rc.use_pallas:
+    if rc.use_pallas and not unfused_ref:
+        from repro.kernels import default_interpret
+        from repro.kernels.rgcn_fused.ops import rgcn_fused_agg_flat
+
+        agg = rgcn_fused_agg_flat(
+            h, lp["basis"], src, dst, coef, wnorm, P, default_interpret(),
+        )
+    elif rc.use_pallas:
         from repro.kernels import default_interpret
         from repro.kernels.rgcn_spmm.ops import rgcn_message_agg_flat
 
+        w = coef * wnorm[:, None]                       # (Q,nb)
         agg = rgcn_message_agg_flat(
             h, lp["basis"], src, dst, w, P, default_interpret(),
         )
     else:
         mdt = _message_dtype(rc)
+        w = coef * wnorm[:, None]                       # (Q,nb)
         h_src = jnp.take(h.astype(mdt), src, axis=0)    # (Q,D)
         weighted = h_src[:, None, :] * w[..., None].astype(mdt)  # (Q,nb,D)
         s = jax.ops.segment_sum(weighted, dst, num_segments=P)   # (P,nb,D)
@@ -283,10 +310,15 @@ def _rgcn_layer_packed(lp, rc: RGCNConfig, h, batch, *, last, rng=None,
 
 
 def encode_packed(p, rc: RGCNConfig, batch, *, rng=None, train=False,
-                  noise_gate=None):
+                  noise_gate=None, unfused_ref=False):
     """Packed batch -> kernel embeddings z_k (G, dims[-1]).  Static sizes
     come from the batch arrays; noise_gate is a per-graph (G,) gate.
-    Padding graphs (graph_mask == 0) produce zero rows."""
+    Padding graphs (graph_mask == 0) produce zero rows.
+
+    ``unfused_ref=True`` reconstructs the pre-fusion path exactly —
+    per-layer normalizer recomputation, rgcn_spmm under use_pallas, and
+    the four-segment-sum readout — and is the parity/bench baseline for
+    the fused default (bit-exact on the jnp path)."""
     if rng is not None:
         rngs = jax.random.split(rng, len(rc.dims))
     else:
@@ -302,21 +334,25 @@ def encode_packed(p, rc: RGCNConfig, batch, *, rng=None, train=False,
     for li, lp in enumerate(p["layers"]):
         h = _rgcn_layer_packed(
             lp, rc, h, batch, last=(li == len(p["layers"]) - 1),
-            rng=rngs[li], train=train,
+            rng=rngs[li], train=train, unfused_ref=unfused_ref,
         )
     # two-level readout: node -> warp segment mean, warp -> graph mean
     wseg, nmask = batch["warp_seg"], batch["node_mask"]
-    W = batch["warp_graph"].shape[0]
     G = batch["graph_mask"].shape[0]
-    wsum = jax.ops.segment_sum(h * nmask[:, None], wseg, num_segments=W)
-    wcnt = jax.ops.segment_sum(nmask, wseg, num_segments=W)
-    warp_mean = wsum / jnp.maximum(wcnt, 1.0)[:, None]
-    valid = (wcnt > 0).astype(h.dtype)                  # (W,)
-    gsum = jax.ops.segment_sum(
-        warp_mean * valid[:, None], batch["warp_graph"], num_segments=G
-    )
-    gcnt = jax.ops.segment_sum(valid, batch["warp_graph"], num_segments=G)
-    return gsum / jnp.maximum(gcnt, 1.0)[:, None]
+    if unfused_ref:
+        W = batch["warp_graph"].shape[0]
+        wsum = jax.ops.segment_sum(h * nmask[:, None], wseg, num_segments=W)
+        wcnt = jax.ops.segment_sum(nmask, wseg, num_segments=W)
+        warp_mean = wsum / jnp.maximum(wcnt, 1.0)[:, None]
+        valid = (wcnt > 0).astype(h.dtype)              # (W,)
+        gsum = jax.ops.segment_sum(
+            warp_mean * valid[:, None], batch["warp_graph"], num_segments=G
+        )
+        gcnt = jax.ops.segment_sum(valid, batch["warp_graph"], num_segments=G)
+        return gsum / jnp.maximum(gcnt, 1.0)[:, None]
+    from repro.kernels.rgcn_fused.ops import fused_two_level_readout
+
+    return fused_two_level_readout(h, nmask, wseg, batch["warp_graph"], G)
 
 
 def project(p, rc: RGCNConfig, zk, *, rng=None, train=False):

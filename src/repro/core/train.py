@@ -15,7 +15,10 @@ segment to the device once, and drives training with fixed-length
 `jax.lax.scan` chunks — donated `TrainState`, fold-in per-step RNG, per-step
 metrics accumulated on device and pulled to the host only at ``log_every``
 boundaries.  Compiled chunk executables are shared process-wide (keyed on
-the model/optimizer config), so repeated fits pay zero recompiles.  The
+the model/optimizer config), so repeated fits pay zero recompiles.  Host
+pack/upload staging for chunk i+1 (and the next embed micro-batch) is
+double-buffered behind the device's work on chunk i (`_OneAhead`,
+DESIGN.md §12) — pure pipelining, bit-exact vs ``prefetch=False``.  The
 pre-engine per-step Python loop survives as ``engine='python'``, a parity
 shim for tests and the benchmark baseline: it packs, uploads and syncs every
 step and re-jits per fit, exactly like the seed trainer.
@@ -76,6 +79,78 @@ class FitInterrupted(RuntimeError):
     training job without killing the process."""
 
 
+class _OneAhead:
+    """One-slot host->device staging pipeline (DESIGN.md §12).
+
+    Wraps an iterable of work items and a ``stage`` callable (host pack +
+    ``device_put``); iterating yields ``(item, staged)`` pairs where item
+    i+1's staging runs on a single background thread WHILE the caller
+    consumes item i — jax dispatch is async, so the device crunches chunk i
+    while the host packs chunk i+1.  Items are staged strictly in order on
+    one worker, so the staged arrays, their order, and any rng-key
+    derivation are identical to inline staging: pure pipelining, bit-exact
+    trajectories.  Staged batches are never donated (only TrainState is),
+    so a prefetched buffer can never be invalidated by the running chunk.
+
+    ``enabled=False`` degrades to inline staging (the parity baseline);
+    ``stage_s`` (host seconds spent staging) and ``wait_s`` (main-thread
+    seconds blocked waiting for a stage) quantify the overlap:
+    ``overlap_fraction = 1 - wait_s / stage_s``.
+    """
+
+    def __init__(self, stage, items, *, enabled: bool = True):
+        self._stage = stage
+        self._items = items
+        self.enabled = bool(enabled)
+        self.stage_s = 0.0
+        self.wait_s = 0.0
+
+    def _timed_stage(self, item):
+        t = time.time()
+        try:
+            return self._stage(item)
+        finally:
+            self.stage_s += time.time() - t
+
+    @property
+    def overlap_fraction(self) -> float:
+        if self.stage_s <= 0.0:
+            return 0.0
+        return max(0.0, 1.0 - self.wait_s / self.stage_s)
+
+    def __iter__(self):
+        it = iter(self._items)
+        if not self.enabled:
+            for item in it:  # inline staging: all staging time is wait time
+                staged = self._timed_stage(item)
+                self.wait_s = self.stage_s
+                yield item, staged
+            return
+        from concurrent.futures import ThreadPoolExecutor
+
+        pool = ThreadPoolExecutor(max_workers=1,
+                                  thread_name_prefix="stage-prefetch")
+        try:
+            def task():
+                try:
+                    item = next(it)
+                except StopIteration:
+                    return None
+                return item, self._timed_stage(item)
+
+            fut = pool.submit(task)
+            while True:
+                t = time.time()
+                res = fut.result()
+                self.wait_s += time.time() - t
+                if res is None:
+                    return
+                fut = pool.submit(task)  # stage i+1 while i is consumed
+                yield res
+        finally:
+            pool.shutdown(wait=True)
+
+
 @dataclass(frozen=True)
 class GCLTrainConfig:
     steps: int = 120
@@ -98,6 +173,12 @@ class GCLTrainConfig:
     #: and deterministic, disjoint from the per-step fold_in(base_key, i)
     #: stream (was a hard-coded PRNGKey(123) before the linter's R3)
     eval_fold: int = 123
+    #: double-buffered host->device staging (DESIGN.md §12): while the device
+    #: runs scan chunk i / embed micro-batch i, a background thread packs and
+    #: `device_put`s i+1.  Pure pipelining — the staged arrays, their order,
+    #: and the fold-in key stream are identical, so trajectories are
+    #: bit-exact vs ``prefetch=False`` (asserted by tests/test_train_engine).
+    prefetch: bool = True
     opt: TrainConfig = field(
         default_factory=lambda: TrainConfig(
             learning_rate=7e-4, weight_decay=0.01, warmup_steps=20,
@@ -204,7 +285,10 @@ class ContrastiveTrainer:
         self._embed_fn_dense = None    # dense-path jit cache (per max_warps)
         self._embed_cache: dict[str, np.ndarray] = {}
         self._embed_cache_fp: Optional[str] = None
-        self.embed_cache_max = 65536  # FIFO-evicted above this many entries
+        # LRU-evicted above this many entries: cache hits move the entry to
+        # the dict's insertion-order tail, so eviction pops the least
+        # recently USED key, not merely the oldest inserted
+        self.embed_cache_max = 65536
         self.embed_stats: dict = {}
 
     # -- loss ---------------------------------------------------------------
@@ -428,7 +512,10 @@ class ContrastiveTrainer:
         """Compiled engine: pre-packed epoch plan, per-segment device
         staging (sharded over the mesh's batch axes under MeshRules),
         fixed-length masked scan chunks, log_every-gated host syncs,
-        chunk-boundary checkpoints."""
+        chunk-boundary checkpoints.  With ``tc.prefetch`` the host side of
+        chunk i+1 (row slicing + shard_batch_put + key derivation) rides a
+        background thread behind chunk i's async dispatch (_OneAhead) —
+        bit-exact either way."""
         tc = self.tc
         eng = self._engine()
         wd_fired0 = watchdog.fired if watchdog is not None else 0
@@ -471,86 +558,98 @@ class ContrastiveTrainer:
                     f"({time.time() - t0:.1f}s)"
                 )
 
-        for seg in plan.segments:
-            for lo in range(seg.start, seg.stop, chunk_len):
-                hi = min(lo + chunk_len, seg.stop)
-                if hi <= start_step:
-                    continue
-                n_chunks += 1
-                r0, r1 = lo - seg.start, hi - seg.start
-                rows_np = {}
-                for f, arr in seg.batches.items():
-                    rows = arr[r0:r1]
-                    if len(rows) < chunk_len:  # edge-pad dead tail steps
-                        pad = np.repeat(rows[-1:], chunk_len - len(rows),
-                                        axis=0)
-                        rows = np.concatenate([rows, pad], axis=0)
-                    rows_np[f] = rows
-                if watchdog is not None:
-                    watchdog.step_start()
-                # multi-device staging: each device receives only its own
-                # shard of the batch axes (leading scan-steps axis stays
-                # replicated); plain upload on a 1-device data axis
-                stacked = shard_batch_put(rows_np, self.mesh_rules,
-                                          leading=1)
-                abs_idx = np.arange(lo, lo + chunk_len)
-                live = (abs_idx < hi) & (abs_idx >= start_step)
-                keys = jax.vmap(
-                    lambda i: jax.random.fold_in(base_key, i)
-                )(jnp.asarray(abs_idx))
-                state, ys = eng.scan(state, stacked, keys,
-                                     jnp.asarray(live))
-                pending.append((ys, live))
-                if watchdog is not None:
-                    # SLO timing needs REAL chunk completion — an opt-in
-                    # sync per chunk, only when a watchdog is armed
-                    # lint: allow[R1] watchdog SLO measurement is a deliberate per-chunk sync
-                    jax.block_until_ready(ys)
-                    watchdog.step_end()
+        def chunk_descs():
+            for seg in plan.segments:
+                for lo in range(seg.start, seg.stop, chunk_len):
+                    hi = min(lo + chunk_len, seg.stop)
+                    if hi <= start_step:
+                        continue
+                    yield (seg, lo, hi)
 
-                done = hi
-                if done >= next_log or done == steps:
-                    flush()
-                    next_log = ((done // tc.log_every) + 1) * tc.log_every
-                due = (mgr is not None and tc.checkpoint_every > 0
-                       and done - last_save >= tc.checkpoint_every)
-                interrupt = (interrupt_after is not None
-                             and done >= interrupt_after)
-                if due or (interrupt and mgr is not None):
-                    flush()
-                    self._save_fit(mgr, state, base_key, history, done)
-                    last_save = done
-                    saves += 1
-                if interrupt:
-                    if mgr is not None:
-                        mgr.wait()
-                    raise FitInterrupted(
-                        f"fit interrupted at step {done} "
-                        f"(interrupt_after={interrupt_after})")
-                # fault boundary: a lost/straggling participant surfaces
-                # HERE (never mid-chunk) — checkpoint, then let the caller
-                # degrade (see fit_resilient)
-                lost = None
-                if fault_hook is not None:
-                    try:
-                        fault_hook(done)
-                    except DeviceLost as e:
-                        lost = e
-                if (lost is None and watchdog is not None
-                        and watchdog.fired > wd_fired0):
-                    lost = DeviceLost(
-                        f"chunk ending at step {done} exceeded the "
-                        f"watchdog SLO (straggling participant)")
-                if lost is not None:
-                    flush()
-                    if mgr is not None:
-                        if done > last_save:
-                            self._save_fit(mgr, state, base_key, history,
-                                           done)
-                            last_save = done
-                            saves += 1
-                        mgr.wait()
-                    raise lost
+        def stage_chunk(desc):
+            """Host side of one chunk: slice + edge-pad the segment rows,
+            shard/upload them, and derive the fold-in key stream.  Runs on
+            the prefetch thread — deterministic in (desc, base_key), so
+            overlap cannot change the math."""
+            seg, lo, hi = desc
+            r0, r1 = lo - seg.start, hi - seg.start
+            rows_np = {}
+            for f, arr in seg.batches.items():
+                rows = arr[r0:r1]
+                if len(rows) < chunk_len:  # edge-pad dead tail steps
+                    pad = np.repeat(rows[-1:], chunk_len - len(rows),
+                                    axis=0)
+                    rows = np.concatenate([rows, pad], axis=0)
+                rows_np[f] = rows
+            # multi-device staging: each device receives only its own
+            # shard of the batch axes (leading scan-steps axis stays
+            # replicated); plain upload on a 1-device data axis
+            stacked = shard_batch_put(rows_np, self.mesh_rules, leading=1)
+            abs_idx = np.arange(lo, lo + chunk_len)
+            live = (abs_idx < hi) & (abs_idx >= start_step)
+            keys = jax.vmap(
+                lambda i: jax.random.fold_in(base_key, i)
+            )(jnp.asarray(abs_idx))
+            return stacked, keys, live
+
+        pipe = _OneAhead(stage_chunk, chunk_descs(), enabled=tc.prefetch)
+        for (_, _, hi), (stacked, keys, live) in pipe:
+            n_chunks += 1
+            if watchdog is not None:
+                watchdog.step_start()
+            state, ys = eng.scan(state, stacked, keys,
+                                 jnp.asarray(live))
+            pending.append((ys, live))
+            if watchdog is not None:
+                # SLO timing needs REAL chunk completion — an opt-in
+                # sync per chunk, only when a watchdog is armed
+                # lint: allow[R1] watchdog SLO measurement is a deliberate per-chunk sync
+                jax.block_until_ready(ys)
+                watchdog.step_end()
+
+            done = hi
+            if done >= next_log or done == steps:
+                flush()
+                next_log = ((done // tc.log_every) + 1) * tc.log_every
+            due = (mgr is not None and tc.checkpoint_every > 0
+                   and done - last_save >= tc.checkpoint_every)
+            interrupt = (interrupt_after is not None
+                         and done >= interrupt_after)
+            if due or (interrupt and mgr is not None):
+                flush()
+                self._save_fit(mgr, state, base_key, history, done)
+                last_save = done
+                saves += 1
+            if interrupt:
+                if mgr is not None:
+                    mgr.wait()
+                raise FitInterrupted(
+                    f"fit interrupted at step {done} "
+                    f"(interrupt_after={interrupt_after})")
+            # fault boundary: a lost/straggling participant surfaces
+            # HERE (never mid-chunk) — checkpoint, then let the caller
+            # degrade (see fit_resilient)
+            lost = None
+            if fault_hook is not None:
+                try:
+                    fault_hook(done)
+                except DeviceLost as e:
+                    lost = e
+            if (lost is None and watchdog is not None
+                    and watchdog.fired > wd_fired0):
+                lost = DeviceLost(
+                    f"chunk ending at step {done} exceeded the "
+                    f"watchdog SLO (straggling participant)")
+            if lost is not None:
+                flush()
+                if mgr is not None:
+                    if done > last_save:
+                        self._save_fit(mgr, state, base_key, history,
+                                       done)
+                        last_save = done
+                        saves += 1
+                    mgr.wait()
+                raise lost
         flush()
 
         info = {
@@ -564,6 +663,10 @@ class ContrastiveTrainer:
             "checkpoint_saves": saves,
             "scan_chunks": n_chunks,
             "chunk_len": chunk_len,
+            "prefetch": pipe.enabled,
+            "prefetch_stage_s": pipe.stage_s,
+            "prefetch_wait_s": pipe.wait_s,
+            "prefetch_overlap": pipe.overlap_fraction,
             "data_shards": (self.mesh_rules.fsdp_size
                             if self.mesh_rules else 1),
         }
@@ -632,22 +735,23 @@ class ContrastiveTrainer:
             )
         return self._embed_fn
 
-    def _encode_bin(self, fn, params, bin_graphs, n_cap, e_cap):
-        """Pack + encode one micro-batch.  Per-graph caps: a single graph
-        larger than the budget is truncated (with accounting) instead of
-        silently blowing the bucket past the Pallas kernel's VMEM budget.
-        Returns (embeddings row-per-graph, PackMeta, bucket key)."""
+    def _stage_bin(self, bin_graphs, n_cap, e_cap):
+        """Pack + upload one micro-batch (the host half of an encode; runs
+        on the prefetch thread).  Per-graph caps: a single graph larger
+        than the budget is truncated (with accounting) instead of silently
+        blowing the bucket past the Pallas kernel's VMEM budget.
+        Returns (device batch, PackMeta, bucket key)."""
         packed, meta = pack_graphs(
             bin_graphs,
             pad_graphs_to=bucket_size(len(bin_graphs), 8),
             max_nodes_per_graph=n_cap, max_edges_per_graph=e_cap,
         )
         batch = {k: jnp.asarray(v) for k, v in packed.items()}
-        return np.asarray(fn(params, batch)), meta, bucket_key(packed)
+        return batch, meta, bucket_key(packed)
 
     def _embed_finish(self, label, hashes, fn, stats):
         """Shared embed epilogue: assemble rows from the cache, warn on
-        truncation, FIFO-evict, publish `self.embed_stats`."""
+        truncation, LRU-evict, publish `self.embed_stats`."""
         if stats["trunc_nodes"] or stats["trunc_edges"]:
             import warnings
 
@@ -660,7 +764,9 @@ class ContrastiveTrainer:
             )
         out = np.stack([self._embed_cache[h] for h in hashes]) if hashes \
             else np.zeros((0, self.rc.dims[-1]), np.float32)
-        while len(self._embed_cache) > self.embed_cache_max:  # FIFO eviction
+        # LRU eviction: hits were moved to the insertion-order tail when
+        # looked up, so the dict's first key is the least recently used
+        while len(self._embed_cache) > self.embed_cache_max:
             self._embed_cache.pop(next(iter(self._embed_cache)))
         self.embed_stats = {
             "graphs": len(hashes),
@@ -688,7 +794,11 @@ class ContrastiveTrainer:
         todo: list[int] = []
         scheduled: set[str] = set()
         for i, hsh in enumerate(hashes):
-            if hsh not in self._embed_cache and hsh not in scheduled:
+            if hsh in self._embed_cache:
+                # LRU touch: move the hit to the insertion-order tail so
+                # hot entries survive eviction pressure
+                self._embed_cache[hsh] = self._embed_cache.pop(hsh)
+            elif hsh not in scheduled:
                 scheduled.add(hsh)
                 todo.append(i)
 
@@ -698,10 +808,15 @@ class ContrastiveTrainer:
             [graphs[i] for i in todo],
             max_nodes=n_cap, max_edges=e_cap, max_graphs=batch_size,
         )
-        for bin_idx in bins:
+
+        def stage(bin_idx):
             sel = [todo[j] for j in bin_idx]
-            z, meta, bkey = self._encode_bin(
-                fn, params, [graphs[i] for i in sel], n_cap, e_cap)
+            return sel, self._stage_bin(
+                [graphs[i] for i in sel], n_cap, e_cap)
+
+        pipe = _OneAhead(stage, bins, enabled=self.tc.prefetch)
+        for _, (sel, (batch, meta, bkey)) in pipe:
+            z = np.asarray(fn(params, batch))
             trunc_nodes += int(meta.trunc_nodes.sum())
             trunc_edges += int(meta.trunc_edges.sum())
             bucket_keys.add(bkey)
@@ -715,13 +830,20 @@ class ContrastiveTrainer:
             "bucket_keys": sorted(bucket_keys),
             "trunc_nodes": trunc_nodes,
             "trunc_edges": trunc_edges,
+            "prefetch": pipe.enabled,
+            "prefetch_stage_s": pipe.stage_s,
+            "prefetch_wait_s": pipe.wait_s,
+            "prefetch_overlap": pipe.overlap_fraction,
         })
 
     def embed_stream(self, params, graphs, batch_size=64, max_nodes=None,
                      max_edges=None) -> np.ndarray:
         """Streaming-iterator variant of `embed`: consumes ANY iterable of
         KernelGraphs (e.g. `repro.workloads.iter_program_graphs`, which
-        traces lazily) holding at most one micro-batch of graphs resident.
+        traces lazily) holding at most one micro-batch of graphs resident
+        inside the binner — plus, with ``tc.prefetch``, ONE staged
+        micro-batch riding the background upload thread (so peak residency
+        is bounded by two micro-batches, never the stream length).
 
         Unlike `embed`, no global size-sort is possible (the stream is
         consumed in arrival order), so distinct bucket keys may be slightly
@@ -742,7 +864,12 @@ class ContrastiveTrainer:
             for g in graphs:
                 h = graph_content_hash(g)
                 order.append(h)
-                if h in self._embed_cache or h in scheduled:
+                if h in self._embed_cache:
+                    # LRU touch (see embed): hot entries survive eviction
+                    self._embed_cache[h] = self._embed_cache.pop(h)
+                    cache_hits += 1
+                    continue
+                if h in scheduled:
                     cache_hits += 1
                     continue
                 scheduled.add(h)
@@ -751,12 +878,20 @@ class ContrastiveTrainer:
         bucket_keys = set()
         trunc_nodes = trunc_edges = 0
         stream_stats: dict = {}
-        for bin_items in stream_bins(
+
+        def stage(bin_items):
+            return self._stage_bin([g for _, g in bin_items], n_cap, e_cap)
+
+        pipe = _OneAhead(
+            stage,
+            stream_bins(
                 pending(), lambda hg: (hg[1].n_nodes, hg[1].n_edges),
                 max_nodes=n_cap, max_edges=e_cap, max_graphs=batch_size,
-                stats=stream_stats):
-            z, meta, bkey = self._encode_bin(
-                fn, params, [g for _, g in bin_items], n_cap, e_cap)
+                stats=stream_stats),
+            enabled=self.tc.prefetch,
+        )
+        for bin_items, (batch, meta, bkey) in pipe:
+            z = np.asarray(fn(params, batch))
             trunc_nodes += int(meta.trunc_nodes.sum())
             trunc_edges += int(meta.trunc_edges.sum())
             bucket_keys.add(bkey)
@@ -771,6 +906,10 @@ class ContrastiveTrainer:
             "trunc_nodes": trunc_nodes,
             "trunc_edges": trunc_edges,
             "streaming": True,
+            "prefetch": pipe.enabled,
+            "prefetch_stage_s": pipe.stage_s,
+            "prefetch_wait_s": pipe.wait_s,
+            "prefetch_overlap": pipe.overlap_fraction,
             **stream_stats,
         })
 

@@ -191,6 +191,7 @@ PACKED_BATCH_AXES: dict[str, tuple] = {
     "edge_type": ("batch",),
     "edge_graph": ("batch",),
     "edge_mask": ("batch",),
+    "edge_norm": ("batch",),
     "warp_graph": ("batch",),
     "graph_mask": ("batch",),
     "trunc_nodes": ("batch",),

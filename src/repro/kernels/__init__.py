@@ -3,6 +3,9 @@
 flash_attention  GQA causal attention, online softmax, KV-block streaming
 rgcn_spmm        RGCN message aggregation as MXU one-hot matmuls (TPU-native
                  adaptation of scatter-gather SpMM; DESIGN.md §3)
+rgcn_fused       one-pass message+degree-norm+scatter+basis layer for the
+                 packed encode path, plus the fused two-level readout
+                 (DESIGN.md §12)
 kmeans_assign    blocked K-Means assignment + fused Lloyd-step statistics +
                  blocked silhouette sums (planning engine; DESIGN.md §8)
 ssd_scan         Mamba-2/SSD intra-chunk compute (per-chunk MXU matmuls)

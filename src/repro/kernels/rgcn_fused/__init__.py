@@ -1,0 +1,9 @@
+"""Fused RGCN encode front-end: one-pass message+norm+scatter+basis kernel
+and the two-segment-sum readout (DESIGN.md §12)."""
+
+from repro.kernels.rgcn_fused.ops import (  # noqa: F401
+    fused_two_level_readout, rgcn_fused_agg_flat,
+)
+from repro.kernels.rgcn_fused.ref import (  # noqa: F401
+    rgcn_fused_agg_flat_ref, two_level_readout_ref,
+)

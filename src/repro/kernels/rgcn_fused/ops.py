@@ -1,0 +1,80 @@
+"""jit'd wrappers for the fused encode front-end (DESIGN.md §12).
+
+``rgcn_fused_agg_flat``     Pallas forward + oracle-vjp backward for the
+                            one-pass message+norm+scatter+basis layer.
+``fused_two_level_readout`` node→warp→graph masked-mean readout as TWO
+                            concatenated segment-sums (sum|count share one
+                            scatter pass per level) instead of four.
+                            Per-column sums are independent, so this is
+                            bit-exact vs the unfused four-sum epilogue
+                            (ref.two_level_readout_ref).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rgcn_fused.kernel import rgcn_fused_flat_fwd
+from repro.kernels.rgcn_fused.ref import rgcn_fused_agg_flat_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def rgcn_fused_agg_flat(h, basis, src, dst, coef, wnorm, num_nodes: int,
+                        interpret: bool = False):
+    """agg (P,O).  h (P,D); basis (nb,D,O); src/dst (Q,); coef (Q,nb) =
+    comb[etype]; wnorm (Q,) = edge_mask * edge_norm (precomputed degree
+    normalizer; see core/batching.pack_graphs and core/rgcn.py).
+
+    The gather matmul runs in h's dtype (the policy message dtype); edge
+    weights and everything downstream accumulate in f32 inside the kernel —
+    the same precision profile as the rgcn_spmm triple it replaces (which
+    kept the post-gather accumulator f32)."""
+    nb, D, O = basis.shape
+    basisflat = basis.reshape(nb * D, O)
+    return rgcn_fused_flat_fwd(
+        h, src, dst, coef, wnorm, basisflat,
+        num_nodes=num_nodes, interpret=interpret,
+    )
+
+
+def _fwd(h, basis, src, dst, coef, wnorm, num_nodes, interpret):
+    out = rgcn_fused_agg_flat(h, basis, src, dst, coef, wnorm, num_nodes,
+                              interpret)
+    return out, (h, basis, src, dst, coef, wnorm)
+
+
+def _bwd(num_nodes, interpret, res, g):
+    h, basis, src, dst, coef, wnorm = res
+
+    def ref_fn(h_, basis_, coef_, wnorm_):
+        return rgcn_fused_agg_flat_ref(h_, basis_, src, dst, coef_, wnorm_,
+                                       num_nodes)
+
+    _, vjp = jax.vjp(ref_fn, h, basis, coef, wnorm)
+    dh, dbasis, dcoef, dwnorm = vjp(g)
+    return dh, dbasis, None, None, dcoef, dwnorm
+
+
+rgcn_fused_agg_flat.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("num_graphs",))
+def fused_two_level_readout(h, node_mask, warp_seg, warp_graph,
+                            num_graphs: int):
+    """(P,D) node states -> (G,D) graph embeddings.  Each level's (sum,
+    count) pair rides ONE segment-sum over a (·, D+1) concatenation —
+    half the scatter passes of the unfused epilogue, bit-exact."""
+    num_warps = warp_graph.shape[0]
+    nmask = node_mask.astype(h.dtype)
+    x = jnp.concatenate([h * nmask[:, None], nmask[:, None]], axis=1)
+    wagg = jax.ops.segment_sum(x, warp_seg, num_segments=num_warps)
+    wsum, wcnt = wagg[:, :-1], wagg[:, -1]
+    warp_mean = wsum / jnp.maximum(wcnt, 1.0)[:, None]
+    valid = (wcnt > 0).astype(h.dtype)                      # (W,)
+    y = jnp.concatenate([warp_mean * valid[:, None], valid[:, None]], axis=1)
+    gagg = jax.ops.segment_sum(y, warp_graph, num_segments=num_graphs)
+    gsum, gcnt = gagg[:, :-1], gagg[:, -1]
+    return gsum / jnp.maximum(gcnt, 1.0)[:, None]

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the fused RGCN encode front-end.
+
+Two fusions (DESIGN.md §12):
+
+1. ``rgcn_fused_agg_flat_ref`` — the whole packed-layer aggregation in one
+   expression: per-edge message gather, relation-coefficient weighting, the
+   precomputed degree normalizer, the scatter over dst, and the basis
+   contraction.  Equivalent to the rgcn_spmm triple
+   (``segment_sum(deg)`` + SpMM + einsum) with the normalizer hoisted into
+   ``wnorm`` (= edge_mask * edge_norm, computed once per packed batch in
+   core/batching.pack_graphs).
+
+2. ``two_level_readout_ref`` — the node→warp→graph masked-mean readout of
+   ``encode_packed`` as four explicit segment-sums.  The fused op in
+   ops.py collapses each level's sum+count pair into a single concatenated
+   segment-sum; per-column sums are independent, so the fusion is bit-exact
+   against this oracle.
+
+h: (P,D); basis: (nb,D,O); src/dst: (Q,); coef: (Q,nb); wnorm: (Q,)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rgcn_fused_agg_flat_ref(h, basis, src, dst, coef, wnorm, num_nodes: int):
+    """agg (P,O) = sum_k basis[k] . sum_{e: dst_e=v} coef[e,k]*wnorm[e]*h[src_e].
+
+    Scatter-then-contract order (segment-sum of (Q,nb,D) then einsum) so the
+    f32 reduction tree matches the historical unfused jnp path bit-for-bit.
+    """
+    w = coef * wnorm[:, None]                                # (Q,nb)
+    h_src = jnp.take(h, src, axis=0)                         # (Q,D)
+    weighted = h_src[:, None, :] * w[..., None]              # (Q,nb,D)
+    s = jax.ops.segment_sum(weighted, dst, num_segments=num_nodes)
+    return jnp.einsum("nkd,kdo->no", s, basis,
+                      preferred_element_type=jnp.float32)
+
+
+def two_level_readout_ref(h, node_mask, warp_seg, warp_graph,
+                          num_warps: int, num_graphs: int):
+    """(P,D) node states -> (G,D) graph embeddings via masked means, as four
+    separate segment-sums (the pre-fusion encode_packed epilogue)."""
+    nmask = node_mask.astype(h.dtype)
+    wsum = jax.ops.segment_sum(h * nmask[:, None], warp_seg,
+                               num_segments=num_warps)
+    wcnt = jax.ops.segment_sum(nmask, warp_seg, num_segments=num_warps)
+    warp_mean = wsum / jnp.maximum(wcnt, 1.0)[:, None]
+    valid = (wcnt > 0).astype(h.dtype)
+    gsum = jax.ops.segment_sum(warp_mean * valid[:, None], warp_graph,
+                               num_segments=num_graphs)
+    gcnt = jax.ops.segment_sum(valid, warp_graph, num_segments=num_graphs)
+    return gsum / jnp.maximum(gcnt, 1.0)[:, None]

@@ -1,0 +1,28 @@
+"""Known-bad R1: a one-ahead prefetch loop that syncs the engine output
+every iteration — the host round trip serializes exactly the dispatch the
+staging thread was supposed to hide behind."""
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import numpy as np
+
+
+def make_engine():
+    return jax.jit(lambda b: b * 2.0)  # lint: allow[R2] fixture factory
+
+
+def stage(item):
+    return jax.device_put(np.ascontiguousarray(item))
+
+
+def prefetch_loop(items):
+    step = make_engine()
+    out = []
+    with ThreadPoolExecutor(max_workers=1) as pool:
+        fut = pool.submit(stage, items[0])
+        for nxt in items[1:]:
+            batch = fut.result()
+            fut = pool.submit(stage, nxt)
+            z = step(batch)
+            out.append(np.asarray(z))   # R1b: sync rides every dispatch
+    return out

@@ -36,6 +36,7 @@ def rules_of(path) -> set:
     ("R2", "r2_bad.py", "r2_good.py"),
     ("R3", "r3_bad.py", "r3_good.py"),
     ("R1", "r1_shardmap_bad.py", "r1_shardmap_good.py"),
+    ("R1", "r1_prefetch_bad.py", "r1_prefetch_good.py"),
     ("R3", "r3_shardmap_bad.py", "r3_shardmap_good.py"),
     ("R4", "r4_bad.py", "r4_good.py"),
     ("R5", "r5_bad.py", "r5_good.py"),
@@ -52,6 +53,31 @@ def test_r5_kernel_matmul_accumulator():
     assert any(f.rule == "R5" and "preferred_element_type" in f.message
                for f in findings)
     assert not lint_paths([good])
+
+
+def test_fused_kernel_entries_registered_in_callgraph():
+    """The rgcn_fused entry points are pinned trace entries through the
+    explicit KERNEL_ENTRIES registry, independent of decorator detection —
+    R1/R5 must keep looking inside the fused encode front-end."""
+    import ast
+
+    from repro.analysis.callgraph import (
+        KERNEL_ENTRIES, ModuleIndex, build_graph,
+    )
+    from repro.analysis.lint import module_name_for
+
+    fused = {fid for fid in KERNEL_ENTRIES if ".rgcn_fused." in fid}
+    assert len(fused) == 3
+    indexes = []
+    for rel in ("src/repro/kernels/rgcn_fused/kernel.py",
+                "src/repro/kernels/rgcn_fused/ops.py"):
+        path = REPO / rel
+        tree = ast.parse(path.read_text(), filename=str(path))
+        indexes.append(ModuleIndex(str(path), module_name_for(path), tree))
+    funcs = build_graph(indexes)
+    for fid in fused:
+        assert fid in funcs, f"registered kernel entry {fid} not found"
+        assert funcs[fid].traced_entry and funcs[fid].traced
 
 
 def test_r1_flags_both_traced_and_dispatch_loop_sites():

@@ -116,6 +116,44 @@ def test_trainer_embed_matches_dense_path():
     assert trainer.embed_stats["encoded"] == 0
 
 
+def test_embed_cache_lru_hot_entry_survives_eviction_pressure():
+    """The content-hash embed cache is LRU (hits move an entry to MRU), so a
+    hot entry outlives eviction pressure that would have expelled it under
+    the old FIFO policy (insertion order alone)."""
+    graphs = _graphs(6)
+    trainer = ContrastiveTrainer(RGCNConfig(), GCLTrainConfig())
+    trainer.embed_cache_max = 4
+    params = rgcn_mod.init_rgcn(jax.random.PRNGKey(2), trainer.rc)
+
+    hot = graphs[:1]
+    trainer.embed(params, hot)              # hot enters as oldest
+    trainer.embed(params, graphs[1:4])      # cache full: [hot, g1, g2, g3]
+    trainer.embed(params, hot)              # LRU touch -> [g1, g2, g3, hot]
+    assert trainer.embed_stats["cache_hits"] == 1
+    trainer.embed(params, graphs[4:6])      # pressure: evicts g1, g2
+    assert len(trainer._embed_cache) == 4
+    trainer.embed(params, hot)              # FIFO would re-encode here
+    assert trainer.embed_stats["cache_hits"] == 1
+    assert trainer.embed_stats["encoded"] == 0
+
+
+def test_embed_prefetch_parity():
+    """embed() with the one-ahead staging pipeline is bit-exact vs inline
+    staging, and reports the overlap accounting fields."""
+    graphs = _graphs(5)
+    t_pre = ContrastiveTrainer(RGCNConfig(), GCLTrainConfig(prefetch=True))
+    t_off = ContrastiveTrainer(RGCNConfig(), GCLTrainConfig(prefetch=False))
+    params = rgcn_mod.init_rgcn(jax.random.PRNGKey(2), t_pre.rc)
+    z_pre = t_pre.embed(params, graphs)
+    z_off = t_off.embed(params, graphs)
+    np.testing.assert_array_equal(z_pre, z_off)
+    assert t_pre.embed_stats["prefetch"] is True
+    assert t_off.embed_stats["prefetch"] is False
+    assert t_pre.embed_stats["prefetch_stage_s"] > 0
+    assert 0.0 <= t_pre.embed_stats["prefetch_overlap"] <= 1.0
+    assert t_off.embed_stats["prefetch_overlap"] == 0.0
+
+
 def test_embed_compiles_bounded_by_buckets():
     """Mixed-size population: jit compiles of the packed encode stay bounded
     by the number of distinct bucket keys, not the number of micro-batches."""

@@ -1,7 +1,7 @@
 """Kernel-parity suite: every Pallas kernel (rgcn_spmm dense + flat-edge,
-kmeans_assign, flash_attention, ssd_scan) against its pure-jnp `ref.py`
-oracle in interpret mode, across odd / non-power-of-two shapes, empty-edge
-and single-node degenerate cases, and f32/bf16 dtypes.
+rgcn_fused, kmeans_assign, flash_attention, ssd_scan) against its pure-jnp
+`ref.py` oracle in interpret mode, across odd / non-power-of-two shapes,
+empty-edge and single-node degenerate cases, and f32/bf16 dtypes.
 
 Complements tests/test_kernels.py (which pins the happy-path shapes); this
 file owns the shape/dtype boundary grid so kernel edits can't silently
@@ -20,6 +20,12 @@ from repro.kernels.kmeans_assign.ops import (
 )
 from repro.kernels.kmeans_assign.ref import (
     kmeans_assign_fused_ref, kmeans_assign_ref, silhouette_sums_ref,
+)
+from repro.kernels.rgcn_fused.ops import (
+    fused_two_level_readout, rgcn_fused_agg_flat,
+)
+from repro.kernels.rgcn_fused.ref import (
+    rgcn_fused_agg_flat_ref, two_level_readout_ref,
 )
 from repro.kernels.rgcn_spmm.ops import rgcn_message_agg, rgcn_message_agg_flat
 from repro.kernels.rgcn_spmm.ref import (
@@ -130,6 +136,164 @@ def test_rgcn_dense_empty_edges():
     out = rgcn_message_agg(h, basis, e, e, jnp.zeros((2, 0, 2)), 8, True)
     assert out.shape == (2, 8, 6)
     _close(out, jnp.zeros((2, 8, 6)), 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rgcn_fused — one-pass message+norm+scatter+basis layer (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def _fused_inputs(key, P, D, Q, nb, O, dtype):
+    ks = jax.random.split(key, 6)
+    h = jax.random.normal(ks[0], (P, D), dtype)
+    basis = jax.random.normal(ks[1], (nb, D, O), dtype)
+    src = jax.random.randint(ks[2], (Q,), 0, P)
+    dst = jax.random.randint(ks[3], (Q,), 0, P)
+    coef = jax.random.normal(ks[4], (Q, nb), dtype)
+    # wnorm mimics edge_mask * edge_norm: zeros (masked padding) and (0,1]
+    wnorm = jax.random.uniform(ks[5], (Q,), jnp.float32)
+    wnorm = jnp.where(wnorm < 0.25, 0.0, wnorm)
+    return h, basis, src, dst, coef, wnorm
+
+
+@pytest.mark.parametrize("P,D,Q,nb,O", RGCN_FLAT_SHAPES)
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_rgcn_fused_flat_parity(P, D, Q, nb, O, dtype):
+    h, basis, src, dst, coef, wnorm = _fused_inputs(
+        jax.random.PRNGKey(20), P, D, Q, nb, O, dtype)
+    out = rgcn_fused_agg_flat(h, basis, src, dst, coef, wnorm, P, True)
+    ref = rgcn_fused_agg_flat_ref(
+        h.astype(F32), basis.astype(F32), src, dst,
+        coef.astype(F32), wnorm, P)
+    _close(out, ref, _tol(dtype))
+
+
+def test_rgcn_fused_matches_unfused_triple():
+    """The fused kernel reproduces the rgcn_spmm path it replaces:
+    agg == rgcn_message_agg_flat(h, basis, src, dst, coef * wnorm)."""
+    P, D, Q, nb, O = 65, 8, 130, 2, 8
+    h, basis, src, dst, coef, wnorm = _fused_inputs(
+        jax.random.PRNGKey(21), P, D, Q, nb, O, F32)
+    fused = rgcn_fused_agg_flat(h, basis, src, dst, coef, wnorm, P, True)
+    unfused = rgcn_message_agg_flat(
+        h, basis, src, dst, coef * wnorm[:, None], P, True)
+    _close(fused, unfused, 1e-5)
+
+
+def test_rgcn_fused_empty_edges():
+    """Q = 0: identically zero, no division-by-zero in block padding."""
+    h = jax.random.normal(jax.random.PRNGKey(0), (8, 4))
+    basis = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 6))
+    e = jnp.zeros((0,), jnp.int32)
+    out = rgcn_fused_agg_flat(h, basis, e, e, jnp.zeros((0, 2)),
+                              jnp.zeros((0,)), 8, True)
+    assert out.shape == (8, 6)
+    _close(out, jnp.zeros((8, 6)), 1e-6)
+
+
+def test_rgcn_fused_single_node():
+    """P = 1 (self-loops only) survives the one-hot scatter."""
+    h, basis, src, dst, coef, wnorm = _fused_inputs(
+        jax.random.PRNGKey(22), 1, 4, 3, 2, 6, F32)
+    out = rgcn_fused_agg_flat(h, basis, src, dst, coef, wnorm, 1, True)
+    ref = rgcn_fused_agg_flat_ref(h, basis, src, dst, coef, wnorm, 1)
+    _close(out, ref, _tol(F32))
+
+
+def test_rgcn_fused_masked_edges_are_noops():
+    """wnorm = 0 rows (padding edges) contribute nothing — the invariant
+    the edge-bucket padding in core/batching.py relies on."""
+    P, D, Q, nb, O = 16, 8, 20, 2, 8
+    h, basis, src, dst, coef, wnorm = _fused_inputs(
+        jax.random.PRNGKey(23), P, D, Q, nb, O, F32)
+    base = rgcn_fused_agg_flat(h, basis, src, dst, coef, wnorm, P, True)
+    pad = 13
+    srcp = jnp.concatenate([src, jnp.zeros(pad, jnp.int32)])
+    dstp = jnp.concatenate([dst, jnp.zeros(pad, jnp.int32)])
+    coefp = jnp.concatenate([coef, jnp.ones((pad, nb))])  # nonzero coef,
+    wnormp = jnp.concatenate([wnorm, jnp.zeros(pad)])     # zero wnorm
+    padded = rgcn_fused_agg_flat(h, basis, srcp, dstp, coefp, wnormp, P, True)
+    _close(base, padded, 1e-5)
+
+
+@pytest.mark.parametrize("dtype", [F32, BF16])
+def test_rgcn_fused_grads_match_ref(dtype):
+    """fwd+bwd: custom_vjp backward (oracle vjp) vs differentiating the ref
+    directly — checks the residual wiring and nondiff argnums."""
+    P, D, Q, nb, O = 33, 8, 57, 2, 8
+    h, basis, src, dst, coef, wnorm = _fused_inputs(
+        jax.random.PRNGKey(24), P, D, Q, nb, O, dtype)
+    cot = jax.random.normal(jax.random.PRNGKey(25), (P, O), F32)
+
+    def loss_fused(h_, basis_, coef_, wnorm_):
+        out = rgcn_fused_agg_flat(h_, basis_, src, dst, coef_, wnorm_,
+                                  P, True)
+        return jnp.sum(out * cot)
+
+    def loss_ref(h_, basis_, coef_, wnorm_):
+        out = rgcn_fused_agg_flat_ref(h_, basis_, src, dst, coef_, wnorm_, P)
+        return jnp.sum(out * cot)
+
+    gf = jax.grad(loss_fused, argnums=(0, 1, 2, 3))(h, basis, coef, wnorm)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(h, basis, coef, wnorm)
+    for a, b in zip(gf, gr):
+        _close(a, b, _tol(dtype))
+
+
+def test_fused_two_level_readout_bit_exact():
+    """The concatenated sum|count readout is BIT-exact vs the four-sum
+    epilogue — per-column segment sums are independent."""
+    rng = np.random.default_rng(3)
+    P, D, W, G = 37, 16, 9, 4
+    h = jnp.asarray(rng.standard_normal((P, D)), jnp.float32)
+    node_mask = jnp.asarray(rng.random(P) < 0.8, jnp.float32)
+    warp_seg = jnp.asarray(rng.integers(0, W, P), jnp.int32)
+    warp_graph = jnp.asarray(rng.integers(0, G, W), jnp.int32)
+    fused = fused_two_level_readout(h, node_mask, warp_seg, warp_graph, G)
+    ref = two_level_readout_ref(h, node_mask, warp_seg, warp_graph, W, G)
+    assert np.array_equal(np.asarray(fused), np.asarray(ref))
+
+
+def test_fused_two_level_readout_empty_warp():
+    """A warp with zero live nodes stays out of the graph mean (valid=0)."""
+    P, D, W, G = 8, 4, 3, 2
+    h = jnp.ones((P, D), jnp.float32)
+    node_mask = jnp.ones((P,), jnp.float32)
+    warp_seg = jnp.zeros((P,), jnp.int32)      # warps 1, 2 empty
+    warp_graph = jnp.asarray([0, 0, 1], jnp.int32)
+    fused = fused_two_level_readout(h, node_mask, warp_seg, warp_graph, G)
+    ref = two_level_readout_ref(h, node_mask, warp_seg, warp_graph, W, G)
+    assert np.array_equal(np.asarray(fused), np.asarray(ref))
+    assert np.array_equal(np.asarray(fused[1]), np.zeros(D, np.float32))
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_precomputed_edge_norm_matches_recompute(seed):
+    """pack_graphs' hoisted numpy degree normalizer (schema v2) is BIT-exact
+    vs the per-layer jnp recomputation it replaced (including padding rows,
+    which both paths clamp to 1).  The hypothesis sweep over arbitrary
+    packed batches lives in tests/test_batching_property.py."""
+    from repro.core.batching import pack_graphs
+    from repro.core.graphs import NUM_RELATIONS, build_kernel_graph
+    from repro.core.rgcn import edge_norm_packed
+    from repro.tracing.templates import make_kernel
+
+    ks = [
+        make_kernel(f"g{i}", "gemm",
+                    {"M": 128 * (i + 1), "N": 128, "K": 128}, i,
+                    seed=seed * 10 + i)
+        for i in range(3)
+    ]
+    graphs = [build_kernel_graph(k.trace(cap_warps=2, cap_instr=24))
+              for k in ks]
+    packed, _ = pack_graphs(graphs)
+    assert packed["edge_norm"].dtype == np.float32
+    recomputed = edge_norm_packed(
+        jnp.asarray(packed["edge_dst"]), jnp.asarray(packed["edge_type"]),
+        jnp.asarray(packed["edge_mask"]), packed["node_mask"].shape[0],
+        NUM_RELATIONS,
+    )
+    assert np.array_equal(np.asarray(recomputed), packed["edge_norm"])
 
 
 # ---------------------------------------------------------------------------

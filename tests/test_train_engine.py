@@ -73,6 +73,29 @@ def test_scan_engine_matches_python_shim():
     assert np.isclose(i_scan["val_loss"], i_py["val_loss"], atol=1e-5)
 
 
+def test_prefetch_fit_bit_exact_vs_inline_staging():
+    """Double-buffered host->device staging (GCLTrainConfig.prefetch) rides
+    a background thread but stages the SAME arrays in the SAME order with
+    the SAME fold_in keys — the trajectory must be bit-exact vs inline
+    staging, and the overlap accounting must be reported."""
+    p_pre, i_pre = ContrastiveTrainer(
+        RGCNConfig(), _tc(engine="scan", prefetch=True)).fit(GRAPHS)
+    p_off, i_off = ContrastiveTrainer(
+        RGCNConfig(), _tc(engine="scan", prefetch=False)).fit(GRAPHS)
+
+    for a, b in zip(_leaves(p_pre), _leaves(p_off)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    l_pre = [h["loss"] for h in i_pre["history"]]
+    l_off = [h["loss"] for h in i_off["history"]]
+    np.testing.assert_array_equal(l_pre, l_off)
+
+    assert i_pre["prefetch"] is True and i_off["prefetch"] is False
+    assert i_pre["prefetch_stage_s"] > 0
+    assert 0.0 <= i_pre["prefetch_overlap"] <= 1.0
+    # inline staging by definition overlaps nothing
+    assert i_off["prefetch_overlap"] == 0.0
+
+
 def test_scan_host_syncs_bounded_by_log_every():
     """The engine's selling point: metrics cross to the host only at
     log_every boundaries (+ the final flush and the val pull), not per
