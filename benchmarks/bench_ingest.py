@@ -1,0 +1,233 @@
+"""Ingestion benchmark: the parallel trace->graph engine vs the sequential
+loop-oracle reference, proven on real-model-scale traces (DESIGN.md §13).
+
+Four stories, each with an explicit gate (checked by ``main --check`` and
+the ``ingest-smoke`` CI job):
+
+- **cold ingestion throughput** (HARD gate >= 3x): kernels/s through
+  ``IngestEngine`` (vectorized tracer + dedup memo + worker pool) vs the
+  pre-PR sequential reference (``trace_kernel_loop`` per invocation, no
+  dedup) on a model-zoo program at its REAL trace window.  On the 1-core
+  CI container the speedup comes from the vectorized tracer and the dedup
+  memo, not thread scaling — the hypothesis suite separately proves the
+  worker pool bit-exact at any width.
+- **parity** (HARD gate == 0.0): max |engine - reference| over every
+  node/edge array of every graph — the vectorized tracer replays the
+  oracle's exact RNG stream, so the diff is identically zero.
+- **warm-cache zero-retrace** (HARD gate == 0): a fresh engine over the
+  populated ``GraphStore`` re-traces nothing (``stats["traced"] == 0``).
+- **pipeline overlap** (gate > 0): fraction of ingest build time hidden
+  behind the consuming stream_pack stage (1 - wait/build).
+
+Plus the end-to-end proof: >= 3 ``model:<config>`` programs resolve from
+PROGRAMS and flow through ``embed_stream`` on ingested graphs.
+
+Results go to ``benchmarks/results/ingest.json`` AND repo-root
+``BENCH_ingest.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import save_results
+from repro.core.graphs import build_kernel_graph
+from repro.ingest import GraphStore, IngestConfig, IngestEngine
+from repro.tracing.programs import Program, get_program
+from repro.workloads.streaming import stream_pack
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: gate thresholds (the ingest-smoke CI job enforces these)
+MIN_COLD_SPEEDUP = 3.0
+MAX_PARITY_ABS_DIFF = 0.0
+
+_GRAPH_FIELDS = ("node_type", "token", "pc_norm", "vstats", "warp_id",
+                 "edge_src", "edge_dst", "edge_type")
+
+EMBED_PROGRAMS = ("model:llama3.2-3b:prefill", "model:mamba2-780m:decode",
+                  "model:dbrx-132b:prefill")
+
+
+def _truncate(program: Program, n: int) -> Program:
+    if n and len(program.kernels) > n:
+        return Program(program.name, program.kernels[:n],
+                       fingerprint_extra=program.fingerprint_extra
+                       + f"|bench-trunc{n}",
+                       trace_caps=program.trace_caps)
+    return program
+
+
+def _graph_parity(a, b) -> float:
+    """Max abs diff across every array (inf on shape/layout mismatch)."""
+    worst = 0.0
+    for f in _GRAPH_FIELDS:
+        x, y = getattr(a, f), getattr(b, f)
+        if x.shape != y.shape or x.dtype != y.dtype:
+            return float("inf")
+        if x.size:
+            worst = max(worst, float(
+                np.abs(np.asarray(x, np.float64)
+                       - np.asarray(y, np.float64)).max()))
+    return worst
+
+
+def _reference_ingest(program: Program, caps) -> tuple[list, float]:
+    """The pre-engine path: loop-oracle tracer, one kernel at a time, no
+    dedup, no cache — what every run used to pay."""
+    t0 = time.perf_counter()
+    graphs = [build_kernel_graph(inv.trace(*caps, loop=True))
+              for inv in program.kernels]
+    return graphs, time.perf_counter() - t0
+
+
+def run(n_kernels: int = 8, workers: int = 2, embed_kernels: int = 6,
+        train_steps: int = 8, fast: bool = True, verbose: bool = True):
+    from repro.config import resolve_trace_caps
+
+    zoo = _truncate(get_program("model:llama3.2-3b:prefill"),
+                    n_kernels if fast else max(n_kernels, 32))
+    caps = resolve_trace_caps(None, None, zoo)
+
+    # cold throughput + parity: engine vs the sequential loop reference
+    ref_graphs, ref_s = _reference_ingest(zoo, caps)
+    eng_cold = IngestEngine(IngestConfig(workers=workers))
+    t0 = time.perf_counter()
+    eng_graphs = list(eng_cold.iter_graphs(zoo))
+    eng_s = time.perf_counter() - t0
+    parity = max((_graph_parity(a, b)
+                  for a, b in zip(eng_graphs, ref_graphs)), default=0.0)
+    n = len(zoo.kernels)
+    throughput = {
+        "program": zoo.name, "kernels": n,
+        "trace_caps": list(caps),
+        "reference_s": ref_s, "engine_s": eng_s,
+        "reference_kernels_per_s": n / ref_s,
+        "engine_kernels_per_s": n / eng_s,
+        "cold_speedup": ref_s / eng_s,
+        "unique_traced": eng_cold.stats["traced"],
+        "memo_hits": eng_cold.stats["memo_hits"],
+    }
+
+    # warm-cache zero-retrace + pipeline overlap: cold populate the store,
+    # then a FRESH engine streams through stream_pack (pack work is the
+    # consumer the ingest workers hide behind)
+    with tempfile.TemporaryDirectory(prefix="bench_ingest_") as tmp:
+        store = GraphStore(tmp)
+        populate = IngestEngine(IngestConfig(workers=workers), store)
+        list(populate.iter_graphs(zoo))
+        warm_eng = IngestEngine(IngestConfig(workers=workers), store)
+        t0 = time.perf_counter()
+        packed_batches = sum(
+            1 for _ in stream_pack(warm_eng.iter_graphs(zoo)))
+        warm_s = time.perf_counter() - t0
+        warm = {
+            "retraced": warm_eng.stats["traced"],
+            "store_hits": warm_eng.stats["store_hits"],
+            "memo_hits": warm_eng.stats["memo_hits"],
+            "corrupt": warm_eng.stats["corrupt"],
+            "warm_s": warm_s,
+            "packed_batches": packed_batches,
+            "manifest_warm": store.warm(zoo, *caps),
+        }
+    overlap = {
+        "cold_overlap_fraction": eng_cold.overlap_fraction,
+        "cold_build_s": eng_cold.stats["build_s"],
+        "cold_wait_s": eng_cold.stats["wait_s"],
+    }
+
+    # >= 3 model programs end-to-end through embed_stream (one encoder
+    # trained on the first program's graphs, reused to embed all three)
+    from repro.core.rgcn import RGCNConfig
+    from repro.core.sampler import GCLSampler, GCLSamplerConfig
+    from repro.core.train import GCLTrainConfig
+
+    cfg = GCLSamplerConfig(
+        train=GCLTrainConfig(steps=train_steps, batch_size=4, scan_chunk=4,
+                             log_every=100),
+        rgcn=RGCNConfig(),
+        ingest=IngestConfig(workers=workers),
+    )
+    sampler = GCLSampler(cfg)
+    programs = [_truncate(get_program(name), embed_kernels if fast else 0)
+                for name in EMBED_PROGRAMS]
+    sampler.train_stream(sampler.iter_graphs(programs[0]),
+                         n_total=len(programs[0]))
+    embed = {}
+    for prog in programs:
+        t0 = time.perf_counter()
+        emb = sampler.embed_stream(sampler.iter_graphs(prog))
+        embed[prog.name] = {
+            "kernels": len(prog), "embedded": int(emb.shape[0]),
+            "dim": int(emb.shape[1]), "finite": bool(np.isfinite(emb).all()),
+            "embed_s": time.perf_counter() - t0,
+        }
+    embed_ok = (len(embed) >= 3
+                and all(v["embedded"] == v["kernels"] and v["finite"]
+                        for v in embed.values()))
+
+    doc = {
+        "settings": {
+            "fast": fast, "workers": workers, "n_kernels": n,
+            "embed_kernels": embed_kernels, "train_steps": train_steps,
+        },
+        "throughput": throughput,
+        "parity_max_abs_diff": parity,
+        "warm": warm,
+        "overlap": overlap,
+        "embed_stream": embed,
+        "gates": {
+            "cold_speedup": throughput["cold_speedup"] >= MIN_COLD_SPEEDUP,
+            "parity": parity <= MAX_PARITY_ABS_DIFF,
+            "warm_zero_retrace": warm["retraced"] == 0,
+            "overlap": overlap["cold_overlap_fraction"] > 0.0,
+            "model_zoo_embed": embed_ok,
+        },
+    }
+    if verbose:
+        print(f"[ingest] cold {throughput['cold_speedup']:.1f}x vs loop "
+              f"reference (gate >= {MIN_COLD_SPEEDUP}x), parity "
+              f"{parity:.1e}, warm retraced {warm['retraced']}, overlap "
+              f"{overlap['cold_overlap_fraction']:.2f}, "
+              f"{len(embed)} model programs embedded", flush=True)
+
+    save_results("ingest", doc)
+    bench_path = os.path.join(REPO_ROOT, "BENCH_ingest.json")
+    with open(bench_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    if verbose:
+        print(f"[ingest] wrote {bench_path}", flush=True)
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.bench_ingest")
+    ap.add_argument("--kernels", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--embed-kernels", type=int, default=6)
+    ap.add_argument("--train-steps", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (truncated programs)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if any gate fails")
+    args = ap.parse_args(argv)
+    doc = run(n_kernels=args.kernels, workers=args.workers,
+              embed_kernels=args.embed_kernels, train_steps=args.train_steps,
+              fast=args.smoke or args.kernels <= 8)
+    if args.check:
+        failed = [k for k, ok in doc["gates"].items() if not ok]
+        if failed:
+            print(f"FAIL: gates failed: {', '.join(failed)}")
+            return 1
+        print("all ingest gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

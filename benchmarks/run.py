@@ -19,7 +19,7 @@ def main() -> None:
                     help="paper-sized runs (all 11 programs, long training)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig45,table3,fig6,e2e,traincost,"
-                         "encode,plans,serve,scaleout,roofline")
+                         "encode,ingest,plans,serve,scaleout,roofline")
     args = ap.parse_args()
     fast = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -48,7 +48,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_ablations, bench_accuracy_speedup, bench_crossarch,
-        bench_e2e_sim, bench_encode_fusion, bench_microarch,
+        bench_e2e_sim, bench_encode_fusion, bench_ingest, bench_microarch,
         bench_plan_throughput, bench_roofline, bench_scaleout,
         bench_serve_latency, bench_train_throughput,
     )
@@ -61,6 +61,8 @@ def main() -> None:
           fast=fast)
     bench("traincost", bench_train_throughput.run, fast=fast)
     bench("encode", bench_encode_fusion.run, fast=fast)
+    bench("ingest", bench_ingest.run, fast=fast,
+          n_kernels=8 if fast else 32)
     bench("plans", bench_plan_throughput.run, fast=fast)
     bench("serve", bench_serve_latency.run, fast=fast)
     # re-execs itself: --xla_force_host_platform_device_count must be set
@@ -101,6 +103,12 @@ def _derive(name, out) -> str:
                     f";parity={out['parity_max_abs_diff']:.1e}"
                     f";overlap={out['prefetch']['overlap_fraction']:.2f}"
                     f";warm_recompiles={out['warm_recompiles']}")
+        if name == "ingest":
+            return (f"cold_speedup={out['throughput']['cold_speedup']:.1f}x"
+                    f";parity={out['parity_max_abs_diff']:.1e}"
+                    f";warm_retraced={out['warm']['retraced']}"
+                    f";overlap={out['overlap']['cold_overlap_fraction']:.2f}"
+                    f";model_programs={len(out['embed_stream'])}")
         if name == "ablations":
             worst = max(
                 r["error_pct"] for prog in out.values() for r in prog.values()

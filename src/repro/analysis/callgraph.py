@@ -65,6 +65,21 @@ KERNEL_ENTRIES = {
     "repro.kernels.rgcn_fused.ops:fused_two_level_readout",
 }
 
+#: fully-qualified fids of the trace->graph ingestion roots (the dual of
+#: KERNEL_ENTRIES): these run the numpy RNG tracer on HOST threads — on
+#: pool workers via ``pool.submit`` — and must NEVER become reachable from
+#: a jit/scan/vmap trace (the tracer's bit-exact RNG stream contract dies
+#: the moment it runs under a trace).  ``build_graph`` pins them as
+#: ``host_entry`` and R1 flags any of them that the traced fixed point
+#: reaches.  The ``.submit`` hop itself is a call edge (see visit_Call),
+#: so the worker-side bodies stay inside the R1-R5 fixed points.
+INGEST_ENTRIES = {
+    "repro.ingest.engine:IngestEngine.iter_graphs",
+    "repro.ingest.engine:IngestEngine._build_one",
+    "repro.tracing.tracer:trace_kernel",
+    "repro.tracing.tracer:trace_kernel_loop",
+}
+
 #: tracers whose FIRST positional argument is not the traced function
 #: (the traced callable sits at these positions instead)
 _TRACER_FN_POS = {
@@ -100,6 +115,7 @@ class FunctionInfo:
     cls: Optional[str] = None      # enclosing class name, if a method
     calls: set = field(default_factory=set)          # resolved callee ids
     traced_entry: bool = False     # decorated with / passed to a tracer
+    host_entry: bool = False       # registered host-only ingestion root
     lru_cached: bool = False       # functools.lru_cache/cache decorated
     returns_jit: bool = False      # returns a jax.jit(...) result
     donate_positions: tuple = ()   # donate_argnums of the returned jit
@@ -122,6 +138,9 @@ class ModuleIndex(ast.NodeVisitor):
         self.jit_attrs: dict[str, tuple] = {}   # attr name -> donate positions
         #: resolution of every Call node's callee to a dotted string
         self.call_names: dict[ast.Call, Optional[str]] = {}
+        #: pool.submit(fn, ...) call -> resolved worker fn (rules use this
+        #: to treat a future of compiled work as a dispatch source)
+        self.submit_targets: dict[ast.Call, Optional[str]] = {}
         #: per-function local names bound to jitted callables -> donate pos
         self.jit_locals: dict[str, dict[str, tuple]] = {}
         self._scopes: list[dict] = [{}]
@@ -351,6 +370,19 @@ class ModuleIndex(ast.NodeVisitor):
                 if (kw.arg and isinstance(kw.value, ast.Call)
                         and self._is_jit_call(kw.value)):
                     self.jit_attrs[kw.arg] = self._donate_positions(kw.value)
+        # worker-pool hop: pool.submit(fn, ...) runs fn on an executor
+        # thread.  The pool object is an unresolvable local (name is None
+        # here — our OWN .submit methods resolve above and keep their
+        # normal edge), so record the worker fn as a callee: the traced /
+        # dispatching fixed points then see through the executor instead
+        # of losing the body at the thread boundary.
+        if (name is None and node.args
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "submit"):
+            target = self.resolve(node.args[0])
+            self.submit_targets[node] = target
+            if target is not None and self._fn:
+                self._fn[-1].calls.add(target)
         if name in TRACERS:
             positions = _TRACER_FN_POS.get(name, (0,))
             for pos in positions:
@@ -394,6 +426,9 @@ def build_graph(indexes: list[ModuleIndex]) -> dict[str, FunctionInfo]:
     for fid in KERNEL_ENTRIES:      # registered kernel launches (see above)
         if fid in funcs:
             funcs[fid].traced_entry = True
+    for fid in INGEST_ENTRIES:      # registered host-only ingestion roots
+        if fid in funcs:
+            funcs[fid].host_entry = True
 
     def to_fid(callee: str) -> Optional[str]:
         """Map a resolved dotted path to a known function id."""

@@ -187,6 +187,14 @@ class RuleContext:
                          local_exec: dict) -> bool:
         """Does this call launch compiled device work?"""
         name = self.call_name(node)
+        if name is None and node in self.idx.submit_targets:
+            # pool.submit(fn, ...): the future IS compiled work in flight
+            # when the worker fn dispatches — taint it like a direct call
+            worker = self.lookup(self.idx.submit_targets.get(node))
+            if worker is not None:
+                return (worker.traced_entry or worker.returns_jit
+                        or worker.dispatching)
+            return False
         target = self.lookup(name)
         if target is not None:
             return (target.traced_entry or target.returns_jit
@@ -254,6 +262,16 @@ def _sync_kind(ctx: RuleContext, node: ast.Call) -> Optional[str]:
 
 def check_r1(ctx: RuleContext) -> list[Finding]:
     out: list[Finding] = []
+    # R1c: registered host-only ingestion roots (callgraph.INGEST_ENTRIES)
+    # reached by the traced fixed point — the numpy-RNG tracer's bit-exact
+    # stream contract cannot survive running under jit/scan/vmap
+    for info in ctx.idx.functions.values():
+        if info.host_entry and info.traced:
+            out.append(ctx.finding(
+                "R1", info.node,
+                f"registered host-only ingestion entry `{info.qual}` is "
+                f"reachable from a jit/scan/vmap trace — trace->graph "
+                f"ingestion must stay on host threads"))
     # R1a: sync primitives inside traced regions
     for info in ctx.idx.functions.values():
         if not info.traced:

@@ -229,11 +229,19 @@ def build_kernel_graph(traces: list[WarpTrace]) -> KernelGraph:
     )
 
 
-def iter_kernel_graphs(program, cap_warps: int = 2, cap_instr: int = 96):
+def iter_kernel_graphs(program, cap_warps: int | None = None,
+                       cap_instr: int | None = None):
     """Lazily trace + build one HRG per invocation of a
     `tracing.programs.Program` (duck-typed: anything with `.kernels` whose
     items have `.trace`); nothing is retained between yields — the
-    streaming-ingestion primitive (see repro.workloads.streaming)."""
+    streaming-ingestion primitive (see repro.workloads.streaming).
+
+    Omitted caps resolve through ``repro.config.resolve_trace_caps`` — the
+    program's own ``trace_caps`` (model-zoo programs) or the repo defaults —
+    so this path can never trace at a different window than ``trace()``."""
+    from repro.config import resolve_trace_caps
+
+    cap_warps, cap_instr = resolve_trace_caps(cap_warps, cap_instr, program)
     for k in program.kernels:
         yield build_kernel_graph(k.trace(cap_warps, cap_instr))
 

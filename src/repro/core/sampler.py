@@ -18,43 +18,69 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import numpy as np
 
-from repro.core.graphs import KernelGraph, iter_kernel_graphs
+from repro.core.graphs import KernelGraph
 from repro.core.rgcn import RGCNConfig
 from repro.core.train import ContrastiveTrainer, GCLTrainConfig
 from repro.sampling.base import plan_from_labels  # noqa: F401  (compat shim)
 from repro.sim.simulate import SamplingPlan
 from repro.tracing.programs import Program
 
+if TYPE_CHECKING:  # layering: ingest imports core, so core types it lazily
+    from repro.ingest.engine import IngestConfig
+
+
+def _default_ingest():
+    # lazy: repro.ingest sits ABOVE core in the layering (it imports
+    # core.graphs), so core must not import it at module load time
+    from repro.ingest.engine import IngestConfig
+
+    return IngestConfig()
+
 
 @dataclass(frozen=True)
 class GCLSamplerConfig:
-    cap_warps: int = 2
-    cap_instr: int = 96
+    #: trace window; None = resolve per program (its `trace_caps`, else the
+    #: repo defaults in repro.config) — model-zoo programs carry their own
+    cap_warps: Optional[int] = None
+    cap_instr: Optional[int] = None
     k_max: int = 48
     rgcn: RGCNConfig = field(default_factory=RGCNConfig)
     train: GCLTrainConfig = field(default_factory=GCLTrainConfig)
     train_subsample: int = 400   # cap on kernels used for contrastive training
+    #: trace->graph ingestion (workers/depth/cache) — never affects results,
+    #: only how fast graphs arrive (excluded from artifact content keys)
+    ingest: "IngestConfig" = field(default_factory=_default_ingest)
 
 
 class GCLSampler:
     def __init__(self, cfg: Optional[GCLSamplerConfig] = None):
         self.cfg = cfg or GCLSamplerConfig()
         self.trainer = ContrastiveTrainer(self.cfg.rgcn, self.cfg.train)
+        from repro.ingest.engine import IngestEngine
+
+        self.ingest = IngestEngine(self.cfg.ingest)
         self.params = None
 
     # -- stages --------------------------------------------------------------
+    def attach_graph_store(self, graph_store) -> None:
+        """Back the ingestion engine with an on-disk `GraphStore`: warm runs
+        then skip tracing entirely (repro.sampling wires this from the
+        ArtifactStore's run directory)."""
+        self.ingest.store = graph_store
+
     def build_graphs(self, program: Program) -> list[KernelGraph]:
         return list(self.iter_graphs(program))
 
     def iter_graphs(self, program: Program):
-        """Lazy per-invocation trace + graph build (streaming ingestion:
-        nothing is retained between yields)."""
+        """Lazy per-invocation trace + graph build through the ingestion
+        engine (parallel workers, dedup memo, optional graph cache) —
+        deterministic program order, bounded peak residency."""
         c = self.cfg
-        return iter_kernel_graphs(program, c.cap_warps, c.cap_instr)
+        return self.ingest.iter_graphs(program, c.cap_warps, c.cap_instr)
 
     def train_stream(self, graphs_iter, n_total=None, verbose=False,
                      checkpoint_dir=None, resume=True):

@@ -96,12 +96,20 @@ class _OneAhead:
     ``stage_s`` (host seconds spent staging) and ``wait_s`` (main-thread
     seconds blocked waiting for a stage) quantify the overlap:
     ``overlap_fraction = 1 - wait_s / stage_s``.
+
+    ``depth=k`` keeps up to k staged items queued ahead of the consumer
+    (still ONE worker thread, so items stage strictly in submission order
+    and bit-exactness is preserved); the default k=1 is the PR 9
+    behaviour, while the ingestion pipeline runs deeper so a slow trace
+    upstream can't starve the device (DESIGN.md §13).  Peak staged
+    residency is bounded by ``depth + 1``.
     """
 
-    def __init__(self, stage, items, *, enabled: bool = True):
+    def __init__(self, stage, items, *, enabled: bool = True, depth: int = 1):
         self._stage = stage
         self._items = items
         self.enabled = bool(enabled)
+        self.depth = max(1, int(depth))
         self.stage_s = 0.0
         self.wait_s = 0.0
 
@@ -138,14 +146,16 @@ class _OneAhead:
                     return None
                 return item, self._timed_stage(item)
 
-            fut = pool.submit(task)
+            from collections import deque
+
+            q = deque(pool.submit(task) for _ in range(self.depth))
             while True:
                 t = time.time()
-                res = fut.result()
+                res = q.popleft().result()
                 self.wait_s += time.time() - t
                 if res is None:
                     return
-                fut = pool.submit(task)  # stage i+1 while i is consumed
+                q.append(pool.submit(task))  # refill the look-ahead window
                 yield res
         finally:
             pool.shutdown(wait=True)
@@ -179,6 +189,10 @@ class GCLTrainConfig:
     #: and the fold-in key stream are identical, so trajectories are
     #: bit-exact vs ``prefetch=False`` (asserted by tests/test_train_engine).
     prefetch: bool = True
+    #: staged look-ahead window (k slots on ONE worker — order and bits
+    #: unchanged).  >1 lets a deep trace->pack->device pipeline ride out
+    #: jittery upstream ingestion (DESIGN.md §13).
+    prefetch_depth: int = 1
     opt: TrainConfig = field(
         default_factory=lambda: TrainConfig(
             learning_rate=7e-4, weight_decay=0.01, warmup_steps=20,
@@ -592,7 +606,8 @@ class ContrastiveTrainer:
             )(jnp.asarray(abs_idx))
             return stacked, keys, live
 
-        pipe = _OneAhead(stage_chunk, chunk_descs(), enabled=tc.prefetch)
+        pipe = _OneAhead(stage_chunk, chunk_descs(), enabled=tc.prefetch,
+                         depth=tc.prefetch_depth)
         for (_, _, hi), (stacked, keys, live) in pipe:
             n_chunks += 1
             if watchdog is not None:
@@ -814,7 +829,8 @@ class ContrastiveTrainer:
             return sel, self._stage_bin(
                 [graphs[i] for i in sel], n_cap, e_cap)
 
-        pipe = _OneAhead(stage, bins, enabled=self.tc.prefetch)
+        pipe = _OneAhead(stage, bins, enabled=self.tc.prefetch,
+                         depth=self.tc.prefetch_depth)
         for _, (sel, (batch, meta, bkey)) in pipe:
             z = np.asarray(fn(params, batch))
             trunc_nodes += int(meta.trunc_nodes.sum())

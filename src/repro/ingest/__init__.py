@@ -1,0 +1,18 @@
+"""Parallel, deterministic, cache-backed trace->graph ingestion.
+
+The host-side front door of the sampler: `IngestEngine` traces kernels and
+builds their HRGs through a worker pool with deterministic output order and
+bounded peak residency, while `GraphStore` persists packed graphs on disk so
+warm runs skip tracing entirely (DESIGN.md §13).
+"""
+
+from repro.ingest.engine import IngestConfig, IngestEngine
+from repro.ingest.store import GRAPH_SCHEMA, GraphStore, kernel_graph_key
+
+__all__ = [
+    "GRAPH_SCHEMA",
+    "GraphStore",
+    "IngestConfig",
+    "IngestEngine",
+    "kernel_graph_key",
+]

@@ -45,8 +45,11 @@ from repro.tracing.programs import PAPER_PROGRAMS, get_program
 from repro.workloads import scenario_families, scenario_family_of, scenario_matrix
 
 RESULTS_SCHEMA = "repro.sampling.results/v2"
-SUITES = ("paper", "scenarios")
+SUITES = ("paper", "scenarios", "modelzoo")
 SMOKE_PROGRAMS = ["3mm", "backprop"]
+# modelzoo-suite smoke: one small arch, both phases (the full suite is
+# repro.workloads.zoo_names(): every zoo arch x prefill/decode)
+SMOKE_MODELZOO = ["model:llama3.2-3b:prefill", "model:llama3.2-3b:decode"]
 SMOKE_GCL = dict(steps=10, batch_size=4, cap_instr=48)
 # scenario-suite smoke: 3 families x 1 seed, small phase sizes
 SMOKE_SCENARIOS = dict(families=("iterative", "pipeline", "long_tail"),
@@ -56,16 +59,21 @@ SMOKE_SCENARIOS = dict(families=("iterative", "pipeline", "long_tail"),
 def _method_kwargs(method_id: str, *, smoke: bool = False,
                    gcl_steps: int = 0, seed: int = 0,
                    suite: str = "paper", checkpoint_every: int = 0,
-                   resume: bool = True) -> dict:
+                   resume: bool = True, ingest_workers: int = 0,
+                   graph_cache: bool = True) -> dict:
     if method_id == "pka":
         return {"seed": seed} if seed else {}
     if method_id != "gcl":
         return {}  # sieve / stem_root are deterministic, no seed
     kw: dict = dict(SMOKE_GCL) if smoke else {}
-    if suite == "scenarios":
-        # generated populations flow through the bounded-memory
-        # trace->graph path regardless of per-program size
+    if suite in ("scenarios", "modelzoo"):
+        # generated populations / 10-100x model-zoo graphs flow through the
+        # bounded-memory trace->graph path regardless of per-program size
         kw["streaming"] = True
+    if ingest_workers:
+        kw["ingest_workers"] = ingest_workers
+    if not graph_cache:
+        kw["graph_cache"] = False
     if gcl_steps:
         kw["steps"] = gcl_steps
     if seed:
@@ -124,6 +132,7 @@ def run_grid(methods: list[str], programs: list[str], platforms: list[str],
              out_dir: str, *, smoke: bool = False, gcl_steps: int = 0,
              seed: int = 0, suite: str = "paper",
              checkpoint_every: int = 0, resume: bool = True,
+             ingest_workers: int = 0, graph_cache: bool = True,
              verbose: bool = True) -> dict:
     """Run every (method, program) cell once, evaluate on every platform."""
     store = ArtifactStore(os.path.join(out_dir, "artifacts"))
@@ -145,7 +154,8 @@ def run_grid(methods: list[str], programs: list[str], platforms: list[str],
             **_method_kwargs(method_id, smoke=smoke, gcl_steps=gcl_steps,
                              seed=seed, suite=suite,
                              checkpoint_every=checkpoint_every,
-                             resume=resume))
+                             resume=resume, ingest_workers=ingest_workers,
+                             graph_cache=graph_cache))
         # stage 1: prepare (train/profile/featurize) the whole program axis
         prepared = []  # (program_name, program, artifacts, prepare_s)
         for program_name in programs:
@@ -355,6 +365,13 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0,
                     help="reseed the stochastic methods (gcl, pka); "
                          "sieve/stem_root are deterministic")
+    ap.add_argument("--ingest-workers", type=int, default=0,
+                    help="concurrent trace->graph ingest workers for gcl "
+                         "(0 = sequential; output is bit-identical at any "
+                         "worker count)")
+    ap.add_argument("--no-graph-cache", action="store_true",
+                    help="skip the on-disk packed-graph cache (always "
+                         "re-trace; warm runs normally re-trace nothing)")
     args = ap.parse_args(argv)
 
     methods = (available_methods() if args.method == "all"
@@ -378,6 +395,10 @@ def main(argv=None) -> int:
                 phases=sm["phases"], phase_len=sm["phase_len"])
         else:
             programs = scenario_matrix(families or None, seeds or (0,))
+    elif args.suite == "modelzoo":
+        from repro.workloads import zoo_names
+
+        programs = SMOKE_MODELZOO if args.smoke else zoo_names()
     else:
         programs = SMOKE_PROGRAMS if args.smoke else list(PAPER_PROGRAMS)
     platforms = [p.strip() for p in args.platforms.split(",") if p.strip()]
@@ -391,7 +412,9 @@ def main(argv=None) -> int:
     doc = run_grid(methods, programs, platforms, args.out, smoke=args.smoke,
                    gcl_steps=args.gcl_steps, seed=args.seed,
                    suite=args.suite, checkpoint_every=args.checkpoint_every,
-                   resume=not args.no_resume)
+                   resume=not args.no_resume,
+                   ingest_workers=args.ingest_workers,
+                   graph_cache=not args.no_graph_cache)
     validate_results(doc)
     os.makedirs(args.out, exist_ok=True)
     results_path = os.path.join(args.out, "results.json")

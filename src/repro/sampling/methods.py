@@ -74,6 +74,8 @@ class GCLMethod(SamplingMethod):
                  streaming: Optional[bool] = None,
                  engine: Optional[str] = None,
                  checkpoint_every: Optional[int] = None,
+                 ingest_workers: Optional[int] = None,
+                 graph_cache: Optional[bool] = None,
                  resume: bool = True):
         #: None = auto (stream iff len(program) >= STREAM_THRESHOLD);
         #: True/False force the streaming / materialized ingestion path
@@ -91,6 +93,11 @@ class GCLMethod(SamplingMethod):
                   if v is not None}
         if train_kw:
             cfg_kw["train"] = replace(cfg.train, **train_kw)
+        ingest_kw = {k: v for k, v in
+                     [("workers", ingest_workers), ("cache", graph_cache)]
+                     if v is not None}
+        if ingest_kw:
+            cfg_kw["ingest"] = replace(cfg.ingest, **ingest_kw)
         self.cfg = replace(cfg, **cfg_kw) if cfg_kw else cfg
         self.sampler = GCLSampler(self.cfg)
         self._trained_on: Optional[str] = None  # program fp of the fit
@@ -98,18 +105,25 @@ class GCLMethod(SamplingMethod):
 
     def config(self) -> dict:
         """JSON-safe config hashed into the artifact content key.  The
-        checkpoint cadence is EXCLUDED: it changes when snapshots are taken,
-        never the fitted encoder (resume is bit-exact), so two runs that
-        differ only in cadence must share artifacts."""
+        checkpoint cadence and the ingest config are EXCLUDED: cadence
+        changes when snapshots are taken and ingest changes how fast graphs
+        arrive (workers/depth/cache) — neither ever changes the fitted
+        encoder or the embeddings (ingestion is bit-identical at any worker
+        count), so runs differing only there must share artifacts."""
         cfg = asdict(self.cfg)
         cfg["train"].pop("checkpoint_every", None)
+        cfg.pop("ingest", None)
         return dict(cfg, streaming=self.streaming)
 
     def attach_store(self, store) -> None:
         """Remember the store so ``prepare`` can place fit checkpoints under
         ``store.checkpoint_dir`` (an interrupted prepare then resumes from
-        the last snapshot instead of refitting)."""
+        the last snapshot instead of refitting), and back the sampler's
+        ingestion engine with the run's on-disk graph cache — warm runs
+        (and `PlanService.submit_program` tenants) skip tracing entirely."""
         self._store = store
+        if self.cfg.ingest.cache and hasattr(store, "graph_store"):
+            self.sampler.attach_graph_store(store.graph_store())
 
     def _fit_checkpoint_dir(self, program: Program) -> Optional[str]:
         if self._store is None or self.cfg.train.checkpoint_every <= 0:
@@ -179,6 +193,15 @@ class GCLMethod(SamplingMethod):
         else:
             emb = self.sampler.embed(graphs)
         t3 = time.time()
+        ing = self.sampler.ingest
+        meta["ingest"] = {
+            "workers": self.cfg.ingest.workers,
+            "kernels": ing.stats["kernels"], "traced": ing.stats["traced"],
+            "memo_hits": ing.stats["memo_hits"],
+            "store_hits": ing.stats["store_hits"],
+            "corrupt": ing.stats["corrupt"],
+            "overlap_fraction": round(ing.overlap_fraction, 4),
+        }
         payload = {
             "params": self.sampler.params,
             "embeddings": emb,

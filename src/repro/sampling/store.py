@@ -136,7 +136,19 @@ class ArtifactStore:
         os.makedirs(root, exist_ok=True)
         self._cache: Optional[dict[tuple[str, str], Artifacts]] = (
             {} if cache else None)
+        self._graph_store = None
         self.cache_stats = {"hits": 0, "misses": 0}
+
+    def graph_store(self):
+        """The run's packed-graph cache (`repro.ingest.GraphStore`), living
+        beside the artifacts under ``<root>/graphs/`` — one per store, so
+        every method/program sharing this run directory shares traced
+        graphs."""
+        if self._graph_store is None:
+            from repro.ingest.store import GraphStore  # lazy: no cycle
+
+            self._graph_store = GraphStore(os.path.join(self.root, "graphs"))
+        return self._graph_store
 
     # -- artifacts -----------------------------------------------------------
     def _artifact_dir(self, method: str, key: str) -> str:

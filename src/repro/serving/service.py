@@ -154,10 +154,13 @@ class PlanService:
 
     def submit_program(self, method, program, store=None) -> Future:
         """Serve a traced program end-to-end: ``run_prepare`` (load-or-
-        prepare through ``store`` — a replayed gcl encoder never refits),
-        then the method's engine-ready request joins the batch queues.
-        Methods that don't plan through the engine (sieve, stem_root)
-        resolve immediately via their own ``plan``.
+        prepare through ``store`` — a replayed gcl encoder never refits,
+        and attaching the store also backs gcl ingestion with the run's
+        packed-graph cache, so a warm tenant re-traces ZERO kernels on
+        re-prepare: DESIGN.md §13), then the method's engine-ready request
+        joins the batch queues.  Methods that don't plan through the
+        engine (sieve, stem_root) resolve immediately via their own
+        ``plan``.
 
         Runs prepare on the CALLER's thread — the expensive stage must
         never block the dispatcher.  Plans come from THIS service's engine

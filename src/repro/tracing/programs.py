@@ -18,6 +18,7 @@ Program structure encodes the behaviors the paper's evaluation hinges on:
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 
 from repro.tracing.templates import make_kernel
@@ -29,9 +30,15 @@ class Program:
     name: str
     kernels: list
     # extra content folded into `program_fingerprint` — generated programs
-    # (repro.workloads) put their ScenarioSpec hash here so two same-named
-    # programs built from different specs/seeds never share artifact keys
+    # (repro.workloads) put their ScenarioSpec hash there so two same-named
+    # programs built from different specs/seeds never share artifact keys,
+    # and model-zoo programs record their trace window there (a caps change
+    # must never replay another window's artifacts)
     fingerprint_extra: str = ""
+    # default (cap_warps, cap_instr) trace window for this program; None =
+    # the repo-wide defaults (repro.config).  Model-zoo programs carry
+    # 10-100x larger windows here (resolve_trace_caps consults it).
+    trace_caps: Optional[tuple] = None
 
     def __len__(self):
         return len(self.kernels)
@@ -328,6 +335,26 @@ for _name, _builder in _BUILDERS.items():
 
 PAPER_PROGRAMS = list(_BUILDERS)
 
+
+def _model_builder(name):
+    def build():
+        from repro.workloads.modelzoo import model_program
+
+        return model_program(name)
+    return build
+
+
+# the model-zoo trace-pack grid (repro.workloads.modelzoo) — registered with
+# lazy builders so the names list in PROGRAMS without importing configs; the
+# grid mirrors modelzoo.MODEL_ZOO x modelzoo.PHASES (asserted by its tests)
+MODEL_ZOO_PROGRAMS = [
+    f"model:{_a}:{_p}"
+    for _a in ("llama3.2-3b", "mamba2-780m", "dbrx-132b")
+    for _p in ("prefill", "decode")
+]
+for _name in MODEL_ZOO_PROGRAMS:
+    PROGRAMS.add(_name, _model_builder(_name))
+
 _cache: dict = {}
 
 
@@ -346,6 +373,10 @@ def get_program(name: str) -> Program:
             _cache[name] = PROGRAMS.get(name)()
         elif name.startswith("lm:"):
             _cache[name] = lm_program(name[3:])
+        elif name.startswith("model:"):
+            from repro.workloads.modelzoo import model_program
+
+            _cache[name] = model_program(name)
         else:
             raise KeyError(f"unknown program {name!r}")
     return _cache[name]

@@ -19,6 +19,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.config import resolve_trace_caps
 from repro.tracing.isa import (
     CLASS_IDS, INSTR_CLASSES, OPCODE_IDS,
 )
@@ -81,12 +82,16 @@ class KernelInvocation:
     def stats(self, platform: str = "P1") -> KernelStats:
         return self.stats_fn(self.params, platform)
 
-    def trace(self, cap_warps: int = 2, cap_instr: int = 256) -> list[WarpTrace]:
+    def trace(self, cap_warps: Optional[int] = None,
+              cap_instr: Optional[int] = None, *,
+              loop: bool = False) -> list[WarpTrace]:
+        cap_warps, cap_instr = resolve_trace_caps(cap_warps, cap_instr)
         body, n_iter, meta = self.body_fn(self.params)
         st = self.stats("P1")  # launch geometry for the S2R prologue values
         meta = dict(meta, ctas=st.ctas, threads=st.threads_per_cta,
                     working_set=st.working_set)
-        return trace_kernel(self, body, n_iter, meta, cap_warps, cap_instr)
+        fn = trace_kernel_loop if loop else trace_kernel
+        return fn(self, body, n_iter, meta, cap_warps, cap_instr)
 
 
 def _rng_for(inv: KernelInvocation, warp: int) -> np.random.Generator:
@@ -110,8 +115,12 @@ def _value_stats(rng, scale, n=8):
     )
 
 
-def trace_kernel(inv, body, n_iter, meta, cap_warps, cap_instr) -> list[WarpTrace]:
-    """Unroll the loop body into per-warp streams (bounded window).
+def trace_kernel_loop(inv, body, n_iter, meta, cap_warps, cap_instr) -> list[WarpTrace]:
+    """Reference tracer: unroll the loop body instruction-by-instruction.
+
+    Kept as the bit-exact oracle for the vectorized ``trace_kernel`` below —
+    both consume the identical `_rng_for` stream, so their outputs must match
+    to the last bit (the parity suite enforces it).
 
     Every warp starts with the SASS prologue real kernels carry:
     S2R ctaid / S2R tid — their recorded dynamic values expose the launch
@@ -200,6 +209,174 @@ def trace_kernel(inv, body, n_iter, meta, cap_warps, cap_instr) -> list[WarpTrac
                     vstats[idx] = _value_stats(rng, float(rng.normal(0, 2.0)))
         out.append(
             WarpTrace(opcode, pc, mask, dest, src, mem_width, mem_addr, vstats)
+        )
+    return out
+
+
+def trace_kernel(inv, body, n_iter, meta, cap_warps, cap_instr) -> list[WarpTrace]:
+    """Vectorized tracer: numpy tiling instead of per-instruction loops.
+
+    Bit-exact with ``trace_kernel_loop``: the per-warp RNG stream is replayed
+    draw-for-draw, but consecutive normal draws are merged into single
+    ``standard_normal`` calls (a Generator's normal stream is
+    position-deterministic, so ``normal(loc, s, 32)`` equals
+    ``loc + s * standard_normal(32)`` and back-to-back draws concatenate) and
+    the 8-dim value statistics are computed for all write events at once over
+    an (M, 32) lane matrix.  Uniform divergence draws interleave with the
+    normal stream, so runs are split at each branch event when
+    ``divergence > 0``."""
+    prologue = [
+        BodyInstr("S2R", (0,), ()),   # ctaid
+        BodyInstr("S2R", (1,), ()),   # tid
+        BodyInstr("IMAD", (2,), (0, 1)),
+    ]
+    body_len = len(body)
+    iters = max(1, min(n_iter, max(1, (cap_instr - len(prologue)) // body_len)))
+    warps = min(cap_warps, meta.get("warps_per_cta", 8))
+    ctas = meta.get("ctas", 1)
+    threads = meta.get("threads", 256)
+    div = meta.get("divergence", 0.0)
+    ws = float(meta.get("working_set", 1 << 20))
+    p0 = len(prologue)
+    N = p0 + body_len * iters
+
+    # -- static instruction template (identical across warps/iterations) ----
+    allins = prologue + list(body)
+    tmpl_op = np.array([OPCODE_IDS[i.op] for i in allins], np.int16)
+    tmpl_dest = np.full((len(allins), 2), -1, np.int16)
+    tmpl_src = np.full((len(allins), 3), -1, np.int16)
+    for j, ins in enumerate(allins):
+        for d_i, d in enumerate(ins.dests[:2]):
+            tmpl_dest[j, d_i] = d
+        for s_i, s_ in enumerate(ins.srcs[:3]):
+            tmpl_src[j, s_i] = s_
+    tmpl_mw = np.array(
+        [(i.mem.get("width", 4) if i.mem is not None else 0) for i in allins],
+        np.int16,
+    )
+    opcode = np.concatenate([tmpl_op[:p0], np.tile(tmpl_op[p0:], iters)])
+    pc = np.concatenate(
+        [16 * np.arange(p0), np.tile(16 * (p0 + np.arange(body_len)), iters)]
+    ).astype(np.int32)
+    dest = np.concatenate([tmpl_dest[:p0], np.tile(tmpl_dest[p0:], (iters, 1))])
+    src = np.concatenate([tmpl_src[:p0], np.tile(tmpl_src[p0:], (iters, 1))])
+    mem_width = np.concatenate([tmpl_mw[:p0], np.tile(tmpl_mw[p0:], iters)])
+
+    # -- per-iteration RNG event sequence (body order, same as the oracle) --
+    # 'u' = 32 uniform lanes (branch divergence), 'm' = 32 normals keyed on
+    # the address, 'd' = 1 scalar normal + 32 lane normals.
+    ev: list[tuple[str, int]] = []
+    loop_js: list[int] = []
+    for j, ins in enumerate(body):
+        if div > 0 and ins.op in ("BRA", "ISETP"):
+            ev.append(("u", j))
+        if ins.mem is not None:
+            ev.append(("m", j))
+        elif ins.dests and ins.dests[0] == 2 and ins.op == "IADD3":
+            loop_js.append(j)
+        elif ins.dests:
+            ev.append(("d", j))
+    val_events = [(k, j) for k, j in ev if k != "u"]
+    unif_js = [j for k, j in ev if k == "u"]
+    n_val, n_u = len(val_events), len(unif_js)
+    per_iter = [(-1 if k == "u" else (33 if k == "d" else 32)) for k, _ in ev]
+    per_iter_normals = sum(c for c in per_iter if c > 0)
+
+    M = 3 + iters * n_val  # value-stat event rows (3 prologue rows first)
+    ev_counts = np.array([33 if k == "d" else 32 for k, _ in val_events],
+                         np.int64)
+    counts = np.concatenate([np.full(3, 32, np.int64), np.tile(ev_counts, iters)])
+    offs = np.zeros(M, np.int64)
+    np.cumsum(counts[:-1], out=offs[1:])
+    has_scalar = counts == 33
+    it_arr = np.arange(iters, dtype=np.int64)
+    if loop_js:
+        lc_row = np.array(
+            [n_iter / 2, n_iter / 3.46, n_iter / 2, 0.0,
+             n_iter, n_iter / 4, 3 * n_iter / 4, 0.0],
+            np.float32,
+        )
+
+    out = []
+    for w in range(warps):
+        rng = _rng_for(inv, w)
+        warp_base = (int((w + 1) / (warps + 1) * ws) // 128) * 128
+        cta_sample = float(rng.integers(0, max(ctas, 1)))
+
+        # replay the draw stream: merged normal runs split by uniform draws
+        chunks: list[np.ndarray] = []
+        unifs: list[np.ndarray] = []
+        if n_u == 0:
+            chunks.append(rng.standard_normal(96 + iters * per_iter_normals))
+        else:
+            run = 96
+            for _ in range(iters):
+                for c in per_iter:
+                    if c < 0:
+                        if run:
+                            chunks.append(rng.standard_normal(run))
+                            run = 0
+                        unifs.append(rng.random(32))
+                    else:
+                        run += c
+            if run:
+                chunks.append(rng.standard_normal(run))
+        z = np.concatenate(chunks)
+
+        # locs per value-event row; mem addresses land in mem_addr as we go
+        mem_addr = np.zeros(N, np.int64)
+        locs = np.empty(M, np.float64)
+        locs[0] = np.log1p(ctas) + cta_sample * 1e-6
+        locs[1] = np.log1p(threads)
+        locs[2] = np.log1p(ctas * threads)
+        if n_val:
+            body_rows = locs[3:].reshape(iters, n_val)
+            for e, (kind, j) in enumerate(val_events):
+                if kind == "m":
+                    m = body[j].mem
+                    stride = m.get("stride_iter", 128)
+                    buf = (int(m.get("base", 0)) >> 28) & 0xF
+                    addr = (buf * (int(ws) // 128) * 128 + warp_base
+                            + it_arr * stride)
+                    mem_addr[p0 + it_arr * body_len + j] = addr
+                    body_rows[:, e] = addr.astype(np.float64) * 1e-6
+        locs[has_scalar] = 2.0 * z[offs[has_scalar]]
+
+        lane_idx = (offs + has_scalar)[:, None] + np.arange(32)[None, :]
+        lanes = locs[:, None] + (np.abs(locs) * 0.1 + 1e-3)[:, None] * z[lane_idx]
+        q25, med, q75 = np.percentile(lanes, [25, 50, 75], axis=1)
+        mean = lanes.mean(axis=1)
+        std = lanes.std(axis=1)
+        skew = np.mean(((lanes - mean[:, None]) / (std[:, None] + 1e-9)) ** 3,
+                       axis=1)
+        stats8 = np.stack(
+            [mean, std, med, lanes.min(axis=1), lanes.max(axis=1),
+             q25, q75, skew], axis=1,
+        ).astype(np.float32)
+
+        vstats = np.zeros((N, 8), np.float32)
+        vstats[:3] = stats8[:3]
+        if n_val:
+            val_j = np.array([j for _, j in val_events], np.int64)
+            tgt = p0 + (it_arr[:, None] * body_len + val_j[None, :]).ravel()
+            vstats[tgt] = stats8[3:]
+        if loop_js:
+            lj = np.array(loop_js, np.int64)
+            tgt = p0 + (it_arr[:, None] * body_len + lj[None, :]).ravel()
+            vstats[tgt] = lc_row
+
+        mask = np.full(N, 0xFFFFFFFF, np.uint32)
+        if n_u:
+            ub = np.asarray(unifs) > div  # (iters*n_u, 32), iteration-major
+            bits = (ub.astype(np.uint64)
+                    << np.arange(32, dtype=np.uint64)[None, :]).sum(axis=1)
+            uj = np.array(unif_js, np.int64)
+            tgt = p0 + (it_arr[:, None] * body_len + uj[None, :]).ravel()
+            mask[tgt] = bits.astype(np.uint32)
+
+        out.append(
+            WarpTrace(opcode.copy(), pc.copy(), mask, dest.copy(), src.copy(),
+                      mem_width.copy(), mem_addr, vstats)
         )
     return out
 

@@ -12,6 +12,9 @@ through ``repro.tracing.programs.get_program`` and the launch grid
 `repro.workloads.streaming` for the bounded-memory ingestion path.
 """
 
+from repro.workloads.modelzoo import (
+    MODEL_ZOO, PHASES, model_program, zoo_names,
+)
 from repro.workloads.scenarios import (
     FAMILIES, build_scenario, scenario_families, scenario_family_of,
     scenario_matrix, scenario_program,
@@ -24,8 +27,9 @@ from repro.workloads.streaming import (
 )
 
 __all__ = [
-    "FAMILIES", "SCN_PREFIX", "ScenarioSpec", "build_scenario",
-    "is_scenario_name", "iter_program_graphs", "materialized_peak",
-    "scenario_families", "scenario_family_of", "scenario_matrix",
-    "scenario_program", "spec_from_name", "stream_pack",
+    "FAMILIES", "MODEL_ZOO", "PHASES", "SCN_PREFIX", "ScenarioSpec",
+    "build_scenario", "is_scenario_name", "iter_program_graphs",
+    "materialized_peak", "model_program", "scenario_families",
+    "scenario_family_of", "scenario_matrix", "scenario_program",
+    "spec_from_name", "stream_pack", "zoo_names",
 ]

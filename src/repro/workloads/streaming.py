@@ -28,9 +28,17 @@ from repro.core.batching import (
 )
 from repro.core.graphs import KernelGraph, iter_kernel_graphs
 
-# canonical lazy trace->graph generator (lives in core next to
-# build_kernel_graph; re-exported here as the ingestion entry point)
-iter_program_graphs = iter_kernel_graphs
+def iter_program_graphs(program, cap_warps=None, cap_instr=None, *,
+                        engine=None):
+    """Canonical lazy trace->graph generator (the ingestion entry point).
+
+    Default: the sequential per-invocation path (`core.graphs`).  Pass an
+    `repro.ingest.IngestEngine` to ingest through the parallel cache-backed
+    path instead — same order, same bits, bounded residency either way.
+    Omitted caps resolve per program (`repro.config.resolve_trace_caps`)."""
+    if engine is not None:
+        return engine.iter_graphs(program, cap_warps, cap_instr)
+    return iter_kernel_graphs(program, cap_warps, cap_instr)
 
 
 def stream_pack(

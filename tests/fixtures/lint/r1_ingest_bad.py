@@ -1,0 +1,26 @@
+"""Known-bad R1: an ingest-style worker pool where the consumer converts
+every future's compiled-engine output to numpy INSIDE the dispatch loop —
+one device round trip per submitted item, hidden behind the executor hop
+(``pool.submit`` is a call edge, so the linter sees the worker dispatch)."""
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import numpy as np
+
+
+def make_engine():
+    return jax.jit(lambda b: b * 2.0)  # lint: allow[R2] fixture factory
+
+
+def encode(item):
+    step = make_engine()
+    return step(item)
+
+
+def ingest_loop(items):
+    out = []
+    with ThreadPoolExecutor(max_workers=2) as pool:
+        for item in items:
+            fut = pool.submit(encode, item)
+            out.append(np.asarray(fut.result()))  # R1b: sync per future
+    return out

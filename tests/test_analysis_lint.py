@@ -37,6 +37,7 @@ def rules_of(path) -> set:
     ("R3", "r3_bad.py", "r3_good.py"),
     ("R1", "r1_shardmap_bad.py", "r1_shardmap_good.py"),
     ("R1", "r1_prefetch_bad.py", "r1_prefetch_good.py"),
+    ("R1", "r1_ingest_bad.py", "r1_ingest_good.py"),
     ("R3", "r3_shardmap_bad.py", "r3_shardmap_good.py"),
     ("R4", "r4_bad.py", "r4_good.py"),
     ("R5", "r5_bad.py", "r5_good.py"),
@@ -78,6 +79,35 @@ def test_fused_kernel_entries_registered_in_callgraph():
     for fid in fused:
         assert fid in funcs, f"registered kernel entry {fid} not found"
         assert funcs[fid].traced_entry and funcs[fid].traced
+
+
+def test_ingest_entries_registered_in_callgraph():
+    """The trace->graph ingestion roots are pinned HOST entries through the
+    INGEST_ENTRIES registry: they exist in the graph, the pool.submit hop
+    links the worker body as a real call edge, and none of them is
+    reachable from a jit/scan/vmap trace (R1 would flag that)."""
+    import ast
+
+    from repro.analysis.callgraph import (
+        INGEST_ENTRIES, ModuleIndex, build_graph,
+    )
+    from repro.analysis.lint import module_name_for
+
+    assert len(INGEST_ENTRIES) >= 4
+    indexes = []
+    for rel in ("src/repro/ingest/engine.py",
+                "src/repro/tracing/tracer.py"):
+        path = REPO / rel
+        tree = ast.parse(path.read_text(), filename=str(path))
+        indexes.append(ModuleIndex(str(path), module_name_for(path), tree))
+    funcs = build_graph(indexes)
+    for fid in INGEST_ENTRIES:
+        assert fid in funcs, f"registered ingest entry {fid} not found"
+        assert funcs[fid].host_entry
+        assert not funcs[fid].traced, f"{fid} must stay host-side"
+    # the executor hop is a call edge: iter_graphs -> _build_one via submit
+    it = funcs["repro.ingest.engine:IngestEngine.iter_graphs"]
+    assert "repro.ingest.engine:IngestEngine._build_one" in it.calls
 
 
 def test_r1_flags_both_traced_and_dispatch_loop_sites():
